@@ -1,0 +1,72 @@
+"""Shared benchmark plumbing.
+
+All scheduling benchmarks run the *real* FCP scheduler (blocks,
+distributor, planner) over sampled workloads; timing numbers for the
+attention module come from the paper's own performance model (§3.3/§3.5)
+driven by those real schedules — measured schedules, modeled time (this
+container is CPU-only; see DESIGN.md §7 "Measurement honesty").
+Scheduler latency numbers are real wall-clock measurements.
+
+Model config: Llama-3-70B attention geometry, as in the paper (§6.1):
+8 KV heads, 64 QO heads, head_dim 128; 32K tokens per worker; 4K blocks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import blocks as bl
+from repro.core import cost_model as cm
+from repro.core import policies
+
+N_Q_HEADS, N_KV_HEADS, HEAD_DIM = 64, 8, 128
+TOKENS_PER_WORKER = 32768
+BLOCK = 4096
+
+
+def make_workload(dist: str, n_workers: int, seed: int = 0,
+                  tokens_per_worker: int = TOKENS_PER_WORKER,
+                  block: int = BLOCK, uniform_len: int = 4096):
+    from repro.data import distributions
+    budget = n_workers * tokens_per_worker
+    comp = distributions.batch_compositions(dist, budget, 1, seed=seed,
+                                            uniform_len=uniform_len)[0]
+    batch = bl.shard_stream(comp, block, budget)
+    deps = bl.kv_dependencies(batch, causal=True)
+    return batch, deps
+
+
+def assignments(batch, deps, n_workers, tokens_per_worker=TOKENS_PER_WORKER,
+                hw=cm.GPU_X):
+    return {
+        "fcp": policies.assign_fcp(batch, deps, n_workers, N_Q_HEADS,
+                                   HEAD_DIM, locality=False),
+        # beyond-paper: FCP + locality refinement (recorded separately)
+        "fcp+loc": policies.assign_fcp(batch, deps, n_workers, N_Q_HEADS,
+                                       HEAD_DIM, locality=True),
+        "ring": policies.assign_ring(batch, n_workers),
+        "bytescale": policies.assign_bytescale(batch, n_workers,
+                                               tokens_per_worker),
+        "magi": policies.assign_magi(batch, deps, n_workers, N_Q_HEADS,
+                                     HEAD_DIM),
+        "wlb": policies.assign_wlb(batch, deps, n_workers,
+                                   tokens_per_worker, hw, N_Q_HEADS,
+                                   N_KV_HEADS, HEAD_DIM),
+    }
+
+
+def simulate(batch, assignment, deps, n_workers, hw=cm.GPU_X,
+             flags=cm.SimFlags(), backward=False):
+    return cm.simulate_attention_module(
+        batch, assignment, deps, n_workers, hw, N_Q_HEADS, N_KV_HEADS,
+        HEAD_DIM, causal=True, flags=flags, backward=backward)
+
+
+def single_worker_mfu(hw=cm.GPU_X, block=BLOCK) -> float:
+    """Normalizer: MFU of single-GPU flash attention at full context."""
+    return cm.kernel_efficiency(TOKENS_PER_WORKER, hw.efficiency_knee)
+
+
+def row(name: str, us: float, **derived) -> str:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us:.2f},{d}"

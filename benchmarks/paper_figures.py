@@ -1,0 +1,189 @@
+"""One benchmark per paper table/figure (see DESIGN.md §7 index).
+
+Each function returns CSV rows ``name,us_per_call,derived``.
+``us_per_call`` is the modeled attention-module time per step in
+microseconds (real schedules, paper's §3.3 performance model); derived
+columns carry MFU / imbalance / ratios.  Scheduler-latency rows are real
+wall-clock.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import policies
+from repro.core.schedule import make_schedule
+
+from . import common
+
+N_SWEEP = (16, 32, 64, 128, 256)
+POLICIES = ("fcp", "ring", "bytescale", "magi", "wlb")
+
+
+def fig9_imbalance(rows: list[str]) -> None:
+    """Fig. 9: computation / communication imbalance vs worker count."""
+    for n in N_SWEEP:
+        batch, deps = common.make_workload("real_world", n, seed=9)
+        asg = common.assignments(batch, deps, n)
+        for name, a in asg.items():
+            r = common.simulate(batch, a, deps, n)
+            rows.append(common.row(
+                f"fig9_imbalance/{name}/N{n}", r.time * 1e6,
+                comp_imb=f"{r.compute_imbalance:.4f}",
+                comm_imb=f"{r.comm_imbalance:.4f}"))
+
+
+def fig10_compute_efficiency(rows: list[str]) -> None:
+    """Fig. 10: normalized attention MFU with perfect balance (uniform
+    lengths = the trace average), isolating kernel-granularity effects."""
+    avg_len = 16384
+    norm = common.single_worker_mfu()
+    for n in N_SWEEP:
+        n_seqs = n * common.TOKENS_PER_WORKER // avg_len
+        batch, deps = common.make_workload("uniform", n, seed=10,
+                                           uniform_len=avg_len)
+        # ring analysis mode: paper-faithful 2N tiny shards per sequence
+        seqlens = [avg_len] * n_seqs
+        ring_t = policies.ring_analysis_loads(
+            seqlens, n, cm.GPU_X, common.N_Q_HEADS, common.HEAD_DIM).max()
+        total = cm.total_attention_flops(batch, common.N_Q_HEADS,
+                                         common.HEAD_DIM)
+        ring_mfu = total / (n * cm.GPU_X.peak_flops * ring_t) / norm
+        asg = common.assignments(batch, deps, n)
+        for name in ("fcp", "fcp+loc", "bytescale", "magi"):
+            r = common.simulate(batch, asg[name], deps, n)
+            rows.append(common.row(
+                f"fig10_norm_mfu/{name}/N{n}", r.time * 1e6,
+                norm_mfu=f"{min(r.mfu / norm, 1.0):.3f}"))
+        rows.append(common.row(
+            f"fig10_norm_mfu/ring/N{n}", ring_t * 1e6,
+            norm_mfu=f"{min(ring_mfu, 1.0):.3f}"))
+
+
+def fig11_weak_scaling(rows: list[str], dist="real_world",
+                       tag="fig11_scaling") -> None:
+    """Fig. 11 (and 15b/16b via dist): weak-scaling module MFU."""
+    for n in N_SWEEP:
+        batch, deps = common.make_workload(dist, n, seed=11)
+        asg = common.assignments(batch, deps, n)
+        for name, a in asg.items():
+            r = common.simulate(batch, a, deps, n)
+            rows.append(common.row(
+                f"{tag}/{name}/N{n}", r.time * 1e6,
+                mfu=f"{r.mfu:.3f}"))
+
+
+def table2_ablation(rows: list[str]) -> None:
+    """Table 2: components on one-by-one at 128 workers (fwd + bwd)."""
+    n = 128
+    batch, deps = common.make_workload("real_world", n, seed=2)
+    a = common.assignments(batch, deps, n)["fcp"]
+    stages = [
+        ("base", cm.SimFlags(pipelining=False, congestion_free=False,
+                             coalesce=1, overlap_reshuffle=False)),
+        ("+pipeline", cm.SimFlags(pipelining=True, congestion_free=False,
+                                  coalesce=1, overlap_reshuffle=False)),
+        ("+solver", cm.SimFlags(pipelining=True, congestion_free=True,
+                                coalesce=1, overlap_reshuffle=False)),
+        ("+coalescer", cm.SimFlags(pipelining=True, congestion_free=True,
+                                   coalesce=16, overlap_reshuffle=False)),
+        ("+reshuffler", cm.SimFlags(pipelining=True, congestion_free=True,
+                                    coalesce=16, overlap_reshuffle=True)),
+    ]
+    for bwd in (False, True):
+        prev = None
+        for name, flags in stages:
+            r = common.simulate(batch, a, deps, n, flags=flags,
+                                backward=bwd)
+            gain = "" if prev is None else f"{prev / r.time - 1:+.0%}"
+            prev = r.time
+            rows.append(common.row(
+                f"table2_ablation/{'bwd' if bwd else 'fwd'}/{name}",
+                r.time * 1e6, mfu=f"{r.mfu:.3f}", gain=gain))
+
+
+def fig12_block_size(rows: list[str]) -> None:
+    """Fig. 12: block-size sensitivity at 128 workers."""
+    n = 128
+    for bs in (1024, 2048, 4096, 8192, 16384):
+        batch, deps = common.make_workload("real_world", n, seed=12,
+                                           block=bs)
+        a = policies.assign_fcp(batch, deps, n, common.N_Q_HEADS,
+                                common.HEAD_DIM, locality=False)
+        flags = cm.SimFlags(coalesce=max(1, 16 * 4096 // bs))
+        r = common.simulate(batch, a, deps, n, flags=flags)
+        rows.append(common.row(f"fig12_blocksize/bs{bs}", r.time * 1e6,
+                               mfu=f"{r.mfu:.3f}",
+                               comp_imb=f"{r.compute_imbalance:.4f}"))
+
+
+def fig13_per_worker_tokens(rows: list[str]) -> None:
+    """Fig. 13: tokens-per-worker sensitivity at 128 workers."""
+    n = 128
+    for tpw in (16384, 32768, 65536, 131072):
+        batch, deps = common.make_workload("real_world", n, seed=13,
+                                           tokens_per_worker=tpw)
+        asg = common.assignments(batch, deps, n, tokens_per_worker=tpw)
+        for name in ("fcp", "ring", "bytescale"):
+            r = common.simulate(batch, asg[name], deps, n)
+            rows.append(common.row(
+                f"fig13_per_worker_tokens/{name}/tpw{tpw}", r.time * 1e6,
+                mfu=f"{r.mfu:.3f}"))
+
+
+def fig14_gpu_y(rows: list[str]) -> None:
+    """Fig. 14: portability — GPU-Y (lower comp/comm ratio) weak scaling."""
+    for n in N_SWEEP:
+        batch, deps = common.make_workload("real_world", n, seed=14)
+        asg = common.assignments(batch, deps, n, hw=cm.GPU_Y)
+        for name in ("fcp", "ring", "bytescale", "wlb"):
+            r = common.simulate(batch, asg[name], deps, n, hw=cm.GPU_Y)
+            rows.append(common.row(
+                f"fig14_gpu_y/{name}/N{n}", r.time * 1e6,
+                mfu=f"{r.mfu:.3f}"))
+
+
+def fig15_16_workloads(rows: list[str]) -> None:
+    fig11_weak_scaling(rows, dist="less_long_tailed", tag="fig15_lognormal")
+    fig11_weak_scaling(rows, dist="bimodal", tag="fig16_bimodal")
+
+
+def fig3_kernel_efficiency(rows: list[str]) -> None:
+    """Fig. 3: attention kernel MFU vs block granularity (model curve,
+    calibrated against the paper's measurements)."""
+    for tokens in (256, 512, 1024, 2048, 4096, 8192, 32768):
+        for hw in (cm.GPU_X, cm.TPU_V5E):
+            eff = cm.kernel_efficiency(tokens, hw.efficiency_knee)
+            rows.append(common.row(
+                f"fig3_kernel_mfu/{hw.name}/len{tokens}", 0.0,
+                mfu=f"{eff:.3f}"))
+
+
+def scheduler_latency(rows: list[str]) -> None:
+    """§4.2 claim: planning completes 'within seconds at the scale of
+    hundreds of workers'.  Real wall-clock of the full pipeline
+    (blocks -> LPT -> matchings -> ExecPlan arrays)."""
+    for n in (64, 128, 256, 512):
+        from repro.data import distributions
+        budget = n * common.TOKENS_PER_WORKER
+        comp = distributions.batch_compositions(
+            "real_world", budget, 1, seed=5)[0]
+        t0 = time.time()
+        sched = make_schedule(comp, n, common.TOKENS_PER_WORKER,
+                              common.BLOCK, n_q_heads=common.N_Q_HEADS,
+                              n_kv_heads=common.N_KV_HEADS,
+                              head_dim=common.HEAD_DIM)
+        dt = time.time() - t0
+        rows.append(common.row(
+            f"scheduler_latency/N{n}", dt * 1e6,
+            rounds=sched.spec.n_rounds, steps=sched.spec.n_steps,
+            blocks=sched.batch.n_blocks))
+
+
+ALL = [fig3_kernel_efficiency, fig9_imbalance, fig10_compute_efficiency,
+       fig11_weak_scaling, table2_ablation, fig12_block_size,
+       fig13_per_worker_tokens, fig14_gpu_y, fig15_16_workloads,
+       scheduler_latency]

@@ -1,0 +1,32 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  See DESIGN.md §7 for the
+figure -> module index and the measurement-honesty note (real schedules +
+real scheduler latency; module times via the paper's §3.3 model, as this
+container is CPU-only).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import paper_figures
+    rows: list[str] = ["name,us_per_call,derived"]
+    t0 = time.time()
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for fn in paper_figures.ALL:
+        if only and only not in fn.__name__:
+            continue
+        t1 = time.time()
+        fn(rows)
+        print(f"# {fn.__name__}: {time.time() - t1:.1f}s", file=sys.stderr)
+    for r in rows:
+        print(r)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Serve a small model with batched requests: prefill + CP decode.
+
+The KV cache is sharded along the sequence dimension over the ``model``
+axis and batch over ``data`` (the decode_32k layout, scaled down); decode
+steps run the pmax/psum flash merge of ``cp_decode_attention``.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import os
+import time
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.configs import smoke_config                          # noqa: E402
+from repro.launch import serve as S                             # noqa: E402
+from repro.launch.mesh import make_mesh                         # noqa: E402
+from repro.models import Model                                  # noqa: E402
+
+
+def main():
+    mesh = make_mesh((4, 2), ("data", "model"))
+    cfg = smoke_config("qwen1_5_110b").replace(param_dtype="float32")
+    model = Model(cfg, tp=2)
+    params = model.init(jax.random.key(0))
+
+    batch, cache_len, gen = 8, 512, 32
+    cache = model.init_cache(batch, cache_len)
+    decode_step, batch_axis, seq_axes = S.build_decode_step(
+        model, mesh, "decode")
+    step = S.jit_decode_step(decode_step, mesh, params, cache, batch,
+                             batch_axis, seq_axes)
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, (batch, 16)).astype(np.int32)
+    toks = prompt[:, 0]
+    out = []
+    t0 = time.time()
+    for i in range(prompt.shape[1] + gen - 1):
+        pos = jnp.full((batch,), i, jnp.int32)
+        nxt, _, cache = step(params, jnp.asarray(toks), pos, cache)
+        toks = prompt[:, i + 1] if i + 1 < prompt.shape[1] \
+            else np.asarray(nxt)
+        if i + 1 >= prompt.shape[1]:
+            out.append(np.asarray(toks))
+    dt = time.time() - t0
+    gen_arr = np.stack(out, axis=1)
+    print(f"served {batch} requests x {gen_arr.shape[1]} tokens "
+          f"in {dt:.2f}s ({batch * gen_arr.shape[1] / dt:.1f} tok/s, "
+          f"cache seq-sharded over {seq_axes})")
+    assert np.isfinite(gen_arr).all()
+    print("serve_decode OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's ``cost_analysis()`` counts while-loop (``lax.scan``) bodies once,
+which undercounts layer-scanned models by ~n_layers; the same applies to
+any text scan over collectives.  This parser:
+
+1. splits the optimized HLO module into computations,
+2. finds every ``while`` op, reads its trip count from the integer
+   constant in the condition computation (lax.scan lowers to a 0..N LT
+   loop), and propagates multipliers through nested loops,
+3. sums per-kind **collective bytes** (result shape of all-gather /
+   all-reduce / reduce-scatter / all-to-all / collective-permute) and a
+   fusion-level **HBM traffic estimate** (operand + result bytes of every
+   materializing op), each weighted by its computation's multiplier.
+
+Used by ``analysis/roofline.py`` for the memory and collective roofline
+terms of the dry-run cells.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_ITEM = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one (possibly tuple) HLO type string prefix."""
+    total = 0
+    for dt, dims in _SHAPE_ITEM.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[tuple[str, str]]] = {}
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_RE.match(line.strip())
+            if m and ("->" in line):
+                cur = m.group(1)
+                self.comps[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            om = _OP_RE.match(line)
+            if om:
+                self.comps[cur].append((om.group(1), om.group(2)))
+        # ENTRY computation: the one not called by anyone
+        called = set()
+        for ops in self.comps.values():
+            for _, rhs in ops:
+                for c in _CALLS_RE.findall(rhs):
+                    called.add(c)
+                w = _WHILE_RE.search(rhs)
+                if w:
+                    called.update(w.groups())
+        entries = [c for c in self.comps if c not in called]
+        self.entry = entries[-1] if entries else next(iter(self.comps))
+        self.multipliers = self._propagate()
+
+    def _trip_count(self, cond_comp: str) -> int:
+        consts = []
+        for _, rhs in self.comps.get(cond_comp, []):
+            cm = _CONST_INT.search("= " + rhs)
+            if cm:
+                consts.append(int(cm.group(1)))
+        return max(consts) if consts else 1
+
+    def _edges(self) -> dict[str, list[tuple[str, int]]]:
+        """comp -> [(child, per-execution multiplier)] (while bodies get
+        their trip count, plain calls/fusions 1)."""
+        out: dict[str, list[tuple[str, int]]] = {c: [] for c in self.comps}
+        for comp, ops in self.comps.items():
+            for _, rhs in ops:
+                w = _WHILE_RE.search(rhs)
+                if w:
+                    cond, body = w.groups()
+                    tm = _TRIP_RE.search(rhs)      # XLA's own annotation
+                    n = int(tm.group(1)) if tm else self._trip_count(cond)
+                    out[comp].append((cond, n))
+                    out[comp].append((body, n))
+                else:
+                    for c in _CALLS_RE.findall(rhs):
+                        out[comp].append((c, 1))
+        return out
+
+    def _propagate(self) -> dict[str, float]:
+        """Topological-order multiplier propagation over the (acyclic)
+        computation call graph — correct for diamond call patterns
+        (shared subcomputations), unlike a one-shot DFS."""
+        edges = self._edges()
+        indeg: dict[str, int] = defaultdict(int)
+        for comp, chs in edges.items():
+            for c, _ in chs:
+                if c in self.comps:
+                    indeg[c] += 1
+        mult: dict[str, float] = defaultdict(float)
+        mult[self.entry] = 1.0
+        from collections import deque
+        q = deque(c for c in self.comps if indeg[c] == 0)
+        while q:
+            comp = q.popleft()
+            m = mult[comp]
+            for c, n in edges.get(comp, []):
+                if c not in self.comps:
+                    continue
+                mult[c] += m * n
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    q.append(c)
+        return dict(mult)
+
+    # ---- metrics -----------------------------------------------------------
+
+    def collective_bytes(self) -> dict[str, float]:
+        out = {k: 0.0 for k in COLLECTIVES}
+        for comp, ops in self.comps.items():
+            m = self.multipliers.get(comp, 0.0)
+            if m == 0:
+                continue
+            for _, rhs in ops:
+                for kind in COLLECTIVES:
+                    if re.search(rf"\b{re.escape(kind)}(-start)?\(", rhs):
+                        head = rhs.split("(", 1)[0]
+                        out[kind] += m * _shape_bytes(head)
+                        break
+        return out
+
+    _SKIP_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "after-all", "custom-call", "while",
+                 "conditional", "partition-id", "replica-id", "iota",
+                 "copy-start", "copy-done")
+
+    _OPCODE_RE = re.compile(r"\b([a-z][a-z0-9\-\.]*)\(")
+
+    @classmethod
+    def _opcode(cls, rhs: str) -> str:
+        """First identifier directly abutting '(' is the opcode — works
+        for tuple-typed results too ('(s32[], ...) tuple(%a)')."""
+        m = cls._OPCODE_RE.search(rhs)
+        return m.group(1) if m else ""
+
+    def _is_inplace_update(self, rhs: str) -> bool:
+        """dynamic-update-slice (possibly wrapped in a fusion whose body
+        is a DUS): writes only the update slice, buffer is aliased."""
+        if self._opcode(rhs) == "dynamic-update-slice":
+            return True
+        for c in _CALLS_RE.findall(rhs):
+            for _, r2 in self.comps.get(c, []):
+                if self._opcode(r2) == "dynamic-update-slice":
+                    return True
+        return False
+
+    def _fusion_slices(self, rhs: str) -> bool:
+        for c in _CALLS_RE.findall(rhs):
+            for _, r2 in self.comps.get(c, []):
+                if self._opcode(r2) == "dynamic-slice":
+                    return True
+        return False
+
+    def hbm_bytes(self, score_dims: tuple[tuple[int, int], ...] = ()
+                  ) -> float | tuple[float, float]:
+        """Fusion-level HBM traffic estimate: result + operand bytes per
+        materializing op, times loop multipliers.  In-place patterns
+        (dynamic-update-slice, incl. fusion-wrapped) count the update
+        slice, not the whole aliased buffer; dynamic-slice counts the
+        slice read + write.
+
+        ``score_dims``: (q_tile, kv_chunk) trailing-dim patterns of
+        attention score tensors.  The portable XLA attention streams
+        scores through HBM; the Pallas TPU kernel keeps them in VMEM, so
+        the caller subtracts this class for the TPU-adjusted memory term.
+        When given, returns (total, score_like)."""
+        score_pats = set()
+        for a, b in score_dims:
+            score_pats.add(f"{a},{b}]")
+            score_pats.add(f"{b},{a}]")
+
+        def is_score(head: str) -> bool:
+            return any(head.rstrip().split("{")[0].rstrip().endswith(p)
+                       for p in score_pats)
+
+        score_like = 0.0
+        total = 0.0
+        sizes: dict[str, int] = {}
+        for ops in self.comps.values():
+            for name, rhs in ops:
+                sizes[name] = _shape_bytes(rhs.split("(", 1)[0])
+        fused = set()
+        for _, ops in self.comps.items():
+            for _, rhs in ops:
+                for c in _CALLS_RE.findall(rhs):
+                    fused.add(c)
+        for comp, ops in self.comps.items():
+            if comp in fused:                 # inside a fusion: not HBM
+                continue
+            m = self.multipliers.get(comp, 0.0)
+            if m == 0:
+                continue
+            for name, rhs in ops:
+                opcode = self._opcode(rhs)
+                if opcode in self._SKIP_OPS:
+                    continue
+                head, _, args = rhs.partition("(")
+                res = _shape_bytes(head)
+                opnds = [sizes.get(a, 0)
+                         for a in re.findall(r"%([\w\.\-]+)", args)]
+                if opcode == "dynamic-slice":
+                    total += m * 2 * res           # slice read + write
+                    continue
+                if self._is_inplace_update(rhs):
+                    # traffic = small operands + slice write (approx):
+                    # drop the aliased big buffer (largest operand)
+                    small = sum(opnds) - (max(opnds) if opnds else 0)
+                    total += m * 2 * max(small, 1)
+                    continue
+                if opcode == "fusion" and self._fusion_slices(rhs):
+                    # fusion internally dynamic-slices big (stacked/loop
+                    # -carried) operands: count those at slice size
+                    opnds = [min(o, max(res, 1)) if o > 4 * max(res, 1)
+                             else o for o in opnds]
+                v = m * (res + sum(opnds))
+                total += v
+                if score_pats and is_score(head):
+                    score_like += v
+        if score_dims:
+            return total, score_like
+        return total

@@ -1,0 +1,133 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from the JSON
+records in experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def load_records(d: pathlib.Path, iterations: bool = False) -> list[dict]:
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        is_iter = "__it" in p.name
+        if is_iter != iterations:
+            continue
+        with open(p) as f:
+            r = json.load(f)
+            r["_file"] = p.stem
+            recs.append(r)
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}M"
+    return f"{b / 1e3:.0f}K"
+
+
+def roofline_table(recs: list[dict], mesh: str) -> str:
+    rows = ["| arch | shape | comp (s) | mem (s) | coll (s) | dominant | "
+            "roofline frac | 6ND/analytic | per-dev temp |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        tag = f"| {r['arch']} | {r['shape']} "
+        if r.get("status") != "ok":
+            rows.append(tag + f"| — | — | — | {r['status']} | — | — | — |")
+            continue
+        ro = r["roofline"]
+        tmax = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        frac = ro["compute_s"] / tmax if tmax else 0.0
+        rows.append(
+            tag + f"| {ro['compute_s']:.4f} | {ro['memory_s']:.4f} "
+            f"| {ro['collective_s']:.4f} | {ro['dominant']} "
+            f"| {frac:.1%} | {r.get('useful_ratio', 0):.2f} "
+            f"| {fmt_bytes(r['memory']['temp_size_in_bytes'])} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile (s) | rounds | "
+            "collective bytes/dev (AG/AR/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        st = r.get("status", "?")
+        comp = f"{r.get('compile_s', 0):.0f}" if st == "ok" else "—"
+        sched = r.get("schedule") or {}
+        rounds = sched.get("rounds", "—")
+        if st == "ok":
+            cb = r["roofline"]["collective_bytes"]
+            coll = "/".join(fmt_bytes(cb.get(k, 0)) for k in
+                            ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute"))
+        else:
+            coll = "—"
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {st} "
+                    f"| {comp} | {rounds} | {coll} |")
+    return "\n".join(rows)
+
+
+def summarize(recs: list[dict]) -> str:
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if "skipped" in str(r.get("status")))
+    fail = [r for r in recs if str(r.get("status", "")).startswith("FAIL")]
+    out = [f"cells: {len(recs)} total, {ok} ok, {sk} skipped, "
+           f"{len(fail)} failed"]
+    for r in fail:
+        out.append(f"  FAILED {r['arch']}×{r['shape']}×{r['mesh']}: "
+                   f"{r['status']}")
+    return "\n".join(out)
+
+
+def iteration_table(base: list[dict], iters: list[dict]) -> str:
+    rows = ["| cell | iteration | mem (s) | coll (s) | CP bytes | "
+            "AR bytes | rounds | resh |", "|---|---|---|---|---|---|---|---|"]
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in base}
+    for group in sorted({(r["arch"], r["shape"], r["mesh"])
+                         for r in iters}):
+        b = by_key.get(group)
+        seq = [("baseline", b)] if b else []
+        seq += sorted(((r["_file"].split("__it")[1], r) for r in iters
+                       if (r["arch"], r["shape"], r["mesh"]) == group))
+        for name, r in seq:
+            if r is None or r.get("status") != "ok":
+                continue
+            ro = r["roofline"]
+            sch = r.get("schedule") or {}
+            rows.append(
+                f"| {group[0]}×{group[1]} | {name} "
+                f"| {ro['memory_s']:.3f} | {ro['collective_s']:.4f} "
+                f"| {fmt_bytes(ro['collective_bytes'].get('collective-permute', 0))} "
+                f"| {fmt_bytes(ro['collective_bytes'].get('all-reduce', 0))} "
+                f"| {sch.get('rounds', '—')} | {sch.get('resh_rounds', '—')} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load_records(pathlib.Path(args.dir))
+    iters = load_records(pathlib.Path(args.dir), iterations=True)
+    print("## Summary\n")
+    print(summarize(recs))
+    print("\n## Dry-run matrix\n")
+    print(dryrun_table(recs))
+    for mesh in ("single",):
+        print(f"\n## Roofline ({mesh}-pod, 256 chips)\n")
+        print(roofline_table(recs, mesh))
+    if iters:
+        print("\n## Perf iterations\n")
+        print(iteration_table(recs, iters))
+
+
+if __name__ == "__main__":
+    main()

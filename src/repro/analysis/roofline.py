@@ -1,0 +1,212 @@
+"""Roofline extraction from compiled XLA artifacts (CPU-host dry-run).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs            / (chips × peak_FLOP/s)
+    memory     = HLO_bytes_accessed   / (chips × HBM_bw)
+    collective = Σ collective operand bytes / (chips × n_links × link_bw)
+
+``cost_analysis()`` provides FLOPs/bytes; collective bytes are parsed
+from the compiled HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute operand shapes).  Hardware: TPU v5e —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+ICI_LINKS = 4          # v5e: 4 usable ICI links per chip (2D torus x2 dirs)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,4096,128]{2,1,0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of *result* shape bytes of every collective op, by kind.
+
+    HLO lines look like:
+      ``x = bf16[8,256]{...} all-reduce(y), replica_groups=...``
+    The result shape is a good proxy for per-device transfer volume
+    (all-gather results are the gathered size; permute moves the shape
+    once)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^[%\w\.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match op name at the start of the op call, not in metadata
+            if re.search(rf"\b{kind}(-start|-done)?\(", rhs):
+                if kind + "-done" in rhs:
+                    continue                   # counted at -start
+                head = rhs.split("(", 1)[0]
+                out[kind] += _shape_bytes(head)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: dict[str, int]
+    chips: int
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def compute_s(self) -> float:
+        # flops is the GLOBAL analytic count -> divide across chips
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        # bytes_accessed is PER-DEVICE (parsed from the SPMD module)
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # collective bytes are PER-DEVICE too
+        return self.total_coll_bytes / (ICI_LINKS * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.coll_bytes, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+        }
+
+
+def analyze(compiled, chips: int,
+            score_dims: tuple[tuple[int, int], ...] = ()
+            ) -> tuple["Roofline", dict]:
+    """Returns (roofline with TPU-adjusted memory, extras dict).
+
+    ``score_dims`` identifies attention score-tensor shapes streamed
+    through HBM only by the portable XLA attention; the Pallas kernel
+    keeps them in VMEM, so the adjusted memory term excludes them (both
+    raw and adjusted are reported)."""
+    from . import hlo_parse
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hlo = compiled.as_text()
+    mod = hlo_parse.HloModule(hlo)
+    # trip-count-aware per-device HBM traffic and collective bytes
+    if score_dims:
+        byts_raw, score_like = mod.hbm_bytes(score_dims)
+    else:
+        byts_raw, score_like = mod.hbm_bytes(), 0.0
+    byts = byts_raw - score_like
+    coll = {k: int(v) for k, v in mod.collective_bytes().items()}
+    roof = Roofline(flops=flops, bytes_accessed=byts,
+                    coll_bytes=coll, chips=chips)
+    extras = {"hbm_bytes_raw": byts_raw,
+              "hbm_bytes_xla_score_tensors": score_like}
+    return roof, extras
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(ma, k, 0) or 0)
+    return out
+
+
+def model_flops(n_params: int, tokens: int, kind: str = "train") -> float:
+    """6·N·D (train fwd+bwd) or 2·N·D (inference fwd)."""
+    return (6.0 if kind == "train" else 2.0) * n_params * tokens
+
+
+def analytic_flops(cfg, seq_len: int, global_batch: int,
+                   kind: str) -> float:
+    """Exact-model FLOPs for the roofline compute term.
+
+    XLA's ``cost_analysis`` counts while-loop (scan) bodies once
+    regardless of trip count (verified on this backend), so the raw HLO
+    number undercounts layer-scanned models by ~n_layers.  We therefore
+    use the analytic count — parameter matmuls (2 FLOPs/param/token fwd)
+    plus mask-aware attention (4·pairs·H·Dh fwd) plus the SSD chunk terms
+    — with x3 for backward (train).  Raw HLO flops are still recorded as
+    ``hlo_flops_raw``.
+    """
+    n_active = cfg.active_param_count()
+    if kind == "decode":
+        tokens = global_batch                  # one token per sample
+        f = 2.0 * n_active * tokens
+        # attention against the cache
+        if cfg.uses_attention:
+            n_attn = (cfg.n_layers if cfg.family != "hybrid"
+                      else cfg.n_layers // cfg.attn_every)
+            f += 4.0 * seq_len * cfg.n_heads * cfg.head_dim * n_attn \
+                * global_batch
+        return f
+    tokens = global_batch * seq_len
+    fwd = 2.0 * n_active * tokens
+    if cfg.uses_attention:
+        n_attn = (cfg.n_layers if cfg.family != "hybrid"
+                  else cfg.n_layers // cfg.attn_every)
+        pairs = global_batch * seq_len * (seq_len + 1) / 2
+        fwd += 4.0 * pairs * cfg.n_heads * cfg.head_dim * n_attn
+    if cfg.family in ("ssm", "hybrid"):
+        din = cfg.ssm_expand * cfg.d_model
+        # SSD: intra-chunk (2·c·(ds+din) per token) + states
+        c, ds = cfg.ssm_chunk, cfg.ssm_state
+        fwd += tokens * cfg.n_layers * (2.0 * c * (ds + din)
+                                        + 4.0 * ds * din)
+    mult = 3.0 if kind == "train" else 1.0     # bwd ~= 2x fwd
+    return fwd * mult
+
+
+def write_json(path, record: dict) -> None:
+    import pathlib
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(record, f, indent=1, default=float)

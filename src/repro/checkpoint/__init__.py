@@ -1,0 +1,2 @@
+from . import checkpointer
+from .manager import CheckpointManager

@@ -1,0 +1,65 @@
+"""Checkpoint manager: step registry, keep-N GC, auto-resume."""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import shutil
+import threading
+
+from . import checkpointer
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, keep_n: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self._pending: list[threading.Thread] = []
+
+    def _path(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step}"
+
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            m = _STEP_RE.match(p.name)
+            if m and checkpointer.is_committed(p):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree, extra: dict | None = None,
+             blocking: bool = True) -> None:
+        extra = dict(extra or {}, step=step)
+        if blocking:
+            checkpointer.save(self._path(step), tree, extra)
+        else:
+            self._pending.append(
+                checkpointer.save_async(self._path(step), tree, extra))
+        self._gc()
+
+    def wait(self) -> None:
+        for th in self._pending:
+            th.join()
+        self._pending.clear()
+
+    def restore(self, like, step: int | None = None):
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        tree = checkpointer.restore(self._path(step), like)
+        extra = checkpointer.read_extra(self._path(step))
+        return tree, extra
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self._path(s), ignore_errors=True)

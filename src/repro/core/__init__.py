@@ -1,0 +1,23 @@
+"""FCP core: block-wise context-parallel scheduling and execution."""
+
+from .blocks import (Block, BlockedBatch, Segment, kv_dependencies,
+                     shard_stream, zigzag_order)
+from .cost_model import (GPU_X, GPU_Y, HARDWARE, TPU_V5E, HardwareProfile,
+                         SimFlags, kernel_efficiency,
+                         simulate_attention_module, total_attention_flops)
+from .distributor import AssignmentResult, assign_blocks
+from .planner import (build_comm_edges, build_reshuffle_edges,
+                      coalesce_matchings, decompose_matchings,
+                      verify_matchings)
+from .schedule import PlanArrays, Schedule, StaticSpec, make_schedule
+
+__all__ = [
+    "Block", "BlockedBatch", "Segment", "kv_dependencies", "shard_stream",
+    "zigzag_order", "GPU_X", "GPU_Y", "HARDWARE", "TPU_V5E",
+    "HardwareProfile", "SimFlags", "kernel_efficiency",
+    "simulate_attention_module", "total_attention_flops",
+    "AssignmentResult", "assign_blocks", "build_comm_edges",
+    "build_reshuffle_edges", "coalesce_matchings", "decompose_matchings",
+    "verify_matchings", "PlanArrays", "Schedule", "StaticSpec",
+    "make_schedule",
+]

@@ -1,0 +1,255 @@
+"""Congestion-free communication planner (paper §4.2 + Appendix A.2).
+
+Block placement is arbitrary, so KV transfers form a bipartite *multigraph*
+with N send nodes and N receive nodes.  A congestion-free sub-stage is a
+*matching* (every worker sends <= 1 and receives <= 1 block; Lemma 1) and
+the minimum number of sub-stages equals the maximum degree Delta (Lemma 2 +
+König/Hall construction): we Delta-regularize the multigraph with dummy
+edges and repeatedly extract perfect matchings.
+
+On TPU each matching **is a partial device permutation**, i.e. exactly one
+``jax.lax.ppermute`` — the torus routes permutations without the hotspot
+the paper worries about for all-to-all traffic (DESIGN.md §2).
+
+The *bottom-up coalescer* merges ``C`` consecutive matchings into one round
+(each worker then moves <= C blocks per round, still hotspot-free), and the
+live-range allocator colors received blocks into a minimal receive buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Hashable, Sequence
+
+import numpy as np
+
+Edge = tuple[int, int, Any]          # (src worker, dst worker, payload)
+
+
+# --------------------------------------------------------------------------
+# perfect matching on a bipartite (multi)graph — Kuhn's algorithm
+# --------------------------------------------------------------------------
+
+def _kuhn_perfect(adj: list[dict[int, int]], n: int,
+                  warm: list[int] | None = None) -> list[int]:
+    """Perfect matching over ``adj[s] = {dst: multiplicity>0}``.
+
+    ``warm`` (dst -> src from the previous round) seeds the matching with
+    edges that still have multiplicity — on Delta-regular multigraphs
+    most survive, so only a few augmenting paths run per round (the
+    planner-latency optimization measured in EXPERIMENTS.md §Perf).
+    """
+    match_src = [-1] * n   # dst -> src
+    match_dst = [-1] * n   # src -> dst
+    if warm is not None:
+        for d, s in enumerate(warm):
+            if s >= 0 and match_dst[s] < 0 and adj[s].get(d, 0) > 0:
+                match_src[d] = s
+                match_dst[s] = d
+
+    def try_augment(src: int, visited: list[bool]) -> bool:
+        for d in adj[src]:
+            if visited[d]:
+                continue
+            visited[d] = True
+            if match_src[d] < 0 or try_augment(match_src[d], visited):
+                match_src[d] = src
+                match_dst[src] = d
+                return True
+        return False
+
+    import sys
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old, 4 * n + 100))
+    try:
+        for s in range(n):
+            if match_dst[s] < 0:
+                if not try_augment(s, [False] * n):
+                    raise RuntimeError(
+                        "no perfect matching; multigraph not regular")
+    finally:
+        sys.setrecursionlimit(old)
+    return match_src
+
+
+# --------------------------------------------------------------------------
+# Delta-regularization + decomposition (Appendix A.2)
+# --------------------------------------------------------------------------
+
+def decompose_matchings(edges: Sequence[Edge], n_workers: int
+                        ) -> list[list[Edge]]:
+    """Partition ``edges`` into ``Delta`` matchings (congestion-free rounds).
+
+    Dummy edges added for regularization are dropped from the output.
+    Payload order per (src, dst) is FIFO.
+    """
+    if not edges:
+        return []
+    counts: dict[tuple[int, int], int] = defaultdict(int)
+    payloads: dict[tuple[int, int], list[Any]] = defaultdict(list)
+    out_deg = np.zeros(n_workers, dtype=np.int64)
+    in_deg = np.zeros(n_workers, dtype=np.int64)
+    for s, d, p in edges:
+        counts[(s, d)] += 1
+        payloads[(s, d)].append(p)
+        out_deg[s] += 1
+        in_deg[d] += 1
+    delta = int(max(out_deg.max(), in_deg.max()))
+
+    # greedily add dummy multi-edges until Delta-regular
+    dummy: dict[tuple[int, int], int] = defaultdict(int)
+    s_deficit = [(int(delta - out_deg[i]), i) for i in range(n_workers)]
+    d_deficit = [(int(delta - in_deg[i]), i) for i in range(n_workers)]
+    s_list = [i for c, i in s_deficit for _ in range(c)]
+    d_list = [i for c, i in d_deficit for _ in range(c)]
+    assert len(s_list) == len(d_list)
+    for s, d in zip(s_list, d_list):
+        dummy[(s, d)] += 1
+
+    adj: list[dict[int, int]] = [defaultdict(int)
+                                 for _ in range(n_workers)]
+    for (s, d), c in counts.items():
+        adj[s][d] += c
+    for (s, d), c in dummy.items():
+        adj[s][d] += c
+
+    matchings: list[list[Edge]] = []
+    warm: list[int] | None = None
+    for _ in range(delta):
+        match_src = _kuhn_perfect(adj, n_workers, warm=warm)
+        round_edges: list[Edge] = []
+        for d in range(n_workers):
+            s = match_src[d]
+            assert s >= 0
+            adj[s][d] -= 1
+            if adj[s][d] == 0:
+                del adj[s][d]
+            if counts.get((s, d), 0) > 0:        # real edge preferred
+                counts[(s, d)] -= 1
+                round_edges.append((s, d, payloads[(s, d)].pop(0)))
+            else:
+                dummy[(s, d)] -= 1
+        matchings.append(round_edges)
+        warm = match_src
+    assert all(c == 0 for c in counts.values()), "real edges left over"
+    return matchings
+
+
+def verify_matchings(matchings: Sequence[Sequence[Edge]],
+                     edges: Sequence[Edge], n_workers: int) -> None:
+    """Check the decomposition: every round is a matching, all edges kept."""
+    flat = []
+    for m in matchings:
+        srcs = [e[0] for e in m]
+        dsts = [e[1] for e in m]
+        assert len(set(srcs)) == len(srcs), "worker sends >1 block in round"
+        assert len(set(dsts)) == len(dsts), "worker recvs >1 block in round"
+        flat.extend(m)
+    assert sorted(map(repr, flat)) == sorted(map(repr, edges)), \
+        "decomposition lost or duplicated edges"
+    out_deg = np.zeros(n_workers, dtype=np.int64)
+    in_deg = np.zeros(n_workers, dtype=np.int64)
+    for s, d, _ in edges:
+        out_deg[s] += 1
+        in_deg[d] += 1
+    delta = int(max(out_deg.max(), in_deg.max(), 0))
+    assert len(matchings) == delta, (len(matchings), delta)
+
+
+def coalesce_matchings(matchings: Sequence[list[Edge]], degree: int
+                       ) -> list[list[list[Edge]]]:
+    """Bottom-up coalescer (§4.2): group ``degree`` consecutive matchings.
+
+    Each coalesced round lets every worker send/recv up to ``degree`` blocks
+    — still hotspot-free because each sub-matching is a permutation.
+    """
+    if degree <= 1:
+        return [[m] for m in matchings]
+    return [list(matchings[i:i + degree])
+            for i in range(0, len(matchings), degree)]
+
+
+# --------------------------------------------------------------------------
+# communication-edge construction
+# --------------------------------------------------------------------------
+
+def build_comm_edges(assignment: np.ndarray,
+                     deps: Sequence[Sequence[int]]) -> list[Edge]:
+    """KV-transfer edges ``(owner(j) -> owner(i), block j)``, deduplicated
+    per destination (a worker pulls each remote block once, §4.2)."""
+    edges: list[Edge] = []
+    seen: set[tuple[int, int]] = set()      # (dst, block)
+    for i, dep in enumerate(deps):
+        dst = int(assignment[i])
+        for j in dep:
+            src = int(assignment[j])
+            if src == dst:
+                continue
+            key = (dst, int(j))
+            if key in seen:
+                continue
+            seen.add(key)
+            edges.append((src, dst, int(j)))
+    return edges
+
+
+def build_reshuffle_edges(stream_owner: np.ndarray,
+                          assignment: np.ndarray) -> list[Edge]:
+    """Block moves between the user (stream) layout and the schedule layout
+    (transparent reshuffler, §4.3)."""
+    edges: list[Edge] = []
+    for b, (u, w) in enumerate(zip(stream_owner, assignment)):
+        if int(u) != int(w):
+            edges.append((int(u), int(w), int(b)))
+    return edges
+
+
+# --------------------------------------------------------------------------
+# receive-buffer live-range allocation
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SlotAllocation:
+    slot_of_arrival: dict[tuple[int, int], int]   # (worker, round) -> slot
+    n_slots: int                                   # buffer depth needed
+
+
+def allocate_recv_slots(
+        arrivals: dict[tuple[int, int], Hashable],     # (worker,round)->blk
+        last_use: dict[tuple[int, Hashable], int],     # (worker,blk)->step
+        n_rounds: int, n_workers: int) -> SlotAllocation:
+    """Greedy interval coloring of received blocks into buffer slots.
+
+    A block arriving at round ``r`` is live until the compute step of its
+    last consumer; slots are reused afterwards.  Keeps the receive buffer
+    at max-concurrent-live depth instead of one-slot-per-round.
+    """
+    slot_of: dict[tuple[int, int], int] = {}
+    n_slots = 0
+    for w in range(n_workers):
+        free: list[int] = []
+        allocated = 0
+        active: list[tuple[int, int]] = []   # (expiry step, slot)
+        for r in range(n_rounds):
+            if (w, r) not in arrivals:
+                continue
+            blk = arrivals[(w, r)]
+            # expire slots whose last use is before this arrival is usable
+            still = []
+            for exp, slot in active:
+                if exp <= r:                 # consumed strictly before now
+                    free.append(slot)
+                else:
+                    still.append((exp, slot))
+            active = still
+            if free:
+                slot = free.pop()
+            else:
+                slot = allocated
+                allocated += 1
+            exp = last_use.get((w, blk), r + 1)
+            active.append((exp, slot))
+            slot_of[(w, r)] = slot
+        n_slots = max(n_slots, allocated)
+    return SlotAllocation(slot_of_arrival=slot_of, n_slots=n_slots)

@@ -1,0 +1,318 @@
+"""End-to-end FCP schedule construction (paper Fig. 6 pipeline).
+
+``make_schedule`` runs: sharding policy ``G`` (stream → fixed blocks) →
+block distributor (Algorithm 1) → communication planner (matching
+decomposition) → per-worker compute-step scheduling → receive-buffer
+coloring, and emits an :class:`ExecPlan`:
+
+* ``StaticSpec`` — a frozen, hashable description (matching permutations,
+  round/step counts, buffer depths).  It is a *static* jit argument: each
+  distinct schedule signature compiles once (DESIGN.md §2).
+* ``PlanArrays`` — int32 numpy tables ``[n_workers, ...]`` that are sharded
+  over the CP axis at run time (per-worker slot indices, step tables,
+  token metadata).  Per-batch variation lives here without recompiling.
+
+The executor (``core/executor.py``) interprets the plan inside
+``shard_map`` with one ``lax.ppermute`` per matching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Sequence
+
+import numpy as np
+
+from . import blocks as blockslib
+from . import cost_model as cm
+from . import distributor as dist
+from . import planner as plannerlib
+from .blocks import PAD_SEGMENT, BlockedBatch
+
+Perm = tuple[tuple[int, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSpec:
+    """Hashable jit-static schedule description."""
+    n_workers: int
+    block_size: int
+    slots: int                  # schedule-layout blocks per worker
+    ext_slots: int              # receive-buffer depth (after coloring)
+    n_rounds: int               # KV communication rounds (matchings)
+    n_steps: int                # compute steps (>= n_rounds when comm)
+    n_resh_rounds: int          # reshuffle rounds
+    comm_perms: tuple[Perm, ...]
+    resh_perms: tuple[Perm, ...]
+    causal: bool
+
+    @property
+    def kv_trash(self) -> int:         # extended-kv trash slot index
+        return self.slots + self.ext_slots
+
+    @property
+    def q_trash(self) -> int:          # schedule-layout trash slot index
+        return self.slots
+
+
+@dataclasses.dataclass
+class PlanArrays:
+    """Per-worker runtime tables ``[n_workers, ...]`` int32, plus
+    *replicated* per-block metadata (``blk_*``: [n_blocks+1, bs], shared
+    by all workers — avoids the O(N·T·bs) copies of a per-step layout;
+    the +1 row is the all-PAD trash block)."""
+    send_slot: np.ndarray        # [N, R]  local kv slot to send (0 if none)
+    recv_slot: np.ndarray        # [N, R]  ext-buffer index to write arrival
+    step_q: np.ndarray           # [N, T]  q slot (q_trash = noop)
+    step_kv: np.ndarray          # [N, T]  extended kv index (kv_trash=noop)
+    step_kv_blk: np.ndarray      # [N, T]  block id consumed (mask lookup)
+    sched_blk: np.ndarray        # [N, slots+1] block id per schedule slot
+    blk_seg: np.ndarray          # [n_blocks+1, bs] REPLICATED
+    blk_pos: np.ndarray          # [n_blocks+1, bs] REPLICATED
+    resh_send_slot: np.ndarray   # [N, R2] user slot to send
+    resh_dst_slot: np.ndarray    # [N, R2] schedule slot to write (trash ok)
+    resh_local_src: np.ndarray   # [N, slots] user slot or -1
+    restore_send_slot: np.ndarray  # [N, R2] schedule slot of o to send back
+    restore_dst_slot: np.ndarray   # [N, R2] user slot to write (trash ok)
+    restore_local_src: np.ndarray  # [N, slots] schedule slot or -1
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Full host-side schedule + provenance for analysis/benchmarks."""
+    batch: BlockedBatch
+    assignment: np.ndarray                  # owner[block]
+    deps: list[list[int]]
+    spec: StaticSpec
+    arrays: PlanArrays
+    comm_edges: list[plannerlib.Edge]
+    resh_edges: list[plannerlib.Edge]
+    comm_matchings: list[list[plannerlib.Edge]]
+    stream_owner: np.ndarray
+    slot_of_block: np.ndarray               # [n_blocks] schedule slot
+    pairs_per_worker: np.ndarray
+
+    def signature(self) -> tuple:
+        """Bucketing key: plans with equal signatures share a compilation."""
+        return (self.spec,)
+
+
+def _perm_of_matching(matching: Sequence[plannerlib.Edge]) -> Perm:
+    return tuple(sorted((int(s), int(d)) for s, d, _ in matching))
+
+
+def make_schedule(
+        seqlens: Sequence[int],
+        n_workers: int,
+        tokens_per_worker: int,
+        block_size: int,
+        *,
+        n_q_heads: int = 8,
+        n_kv_heads: int = 8,
+        head_dim: int = 128,
+        causal: bool = True,
+        assignment: np.ndarray | None = None,   # override (baseline policies)
+        speeds: np.ndarray | None = None,
+        locality: bool | str = "auto",
+        alpha: float = 1.0,
+        beta: float = 1.0,
+) -> Schedule:
+    if tokens_per_worker % block_size != 0:
+        raise ValueError("tokens_per_worker must be a multiple of block_size")
+    if locality == "auto":
+        # locality refinement wins when documents fit within a worker
+        # (uniform/short-dominated batches: kills reshuffle+KV traffic)
+        # but concentrates KV pulls into per-worker hotspots on heavy
+        # long-tailed batches (measured: fig11 N=256 MFU 0.49 -> 0.36) —
+        # enable only when the longest document fits one worker.
+        locality = max(seqlens, default=0) <= tokens_per_worker
+    slots = tokens_per_worker // block_size
+    n_tokens = n_workers * tokens_per_worker
+    batch = blockslib.shard_stream(seqlens, block_size, n_tokens)
+    deps = blockslib.kv_dependencies(batch, causal)
+    n_blocks = batch.n_blocks
+    assert n_blocks == n_workers * slots
+    stream_owner = (np.arange(n_blocks) // slots).astype(np.int32)
+
+    if assignment is None:
+        costs = cm.block_q_flops(batch, deps, n_q_heads, head_dim, causal)
+        mems = cm.block_memory(batch)
+        res = dist.assign_blocks(
+            costs, mems, n_workers, mem_limit=float(tokens_per_worker),
+            alpha=alpha, beta=beta, delta=0.0, speeds=speeds,
+            locality_hint=stream_owner if locality else None)
+        assignment = res.owner
+    assignment = np.asarray(assignment, dtype=np.int32)
+
+    # schedule-layout slot of each block (stable by bid within a worker)
+    slot_of = np.full(n_blocks, -1, dtype=np.int32)
+    for w in range(n_workers):
+        mine = np.where(assignment == w)[0]
+        if len(mine) > slots:
+            raise ValueError(
+                f"worker {w} assigned {len(mine)} blocks > {slots} slots")
+        for s, b in enumerate(sorted(mine)):
+            slot_of[b] = s
+
+    # ---- communication plan ------------------------------------------------
+    comm_edges = plannerlib.build_comm_edges(assignment, deps)
+    matchings = plannerlib.decompose_matchings(comm_edges, n_workers)
+    n_rounds = len(matchings)
+    # arrival round of each remote block at each worker
+    arrival: dict[tuple[int, int], int] = {}
+    for r, m in enumerate(matchings):
+        for s, d, j in m:
+            arrival[(d, int(j))] = r
+
+    # ---- per-worker pair scheduling ----------------------------------------
+    # pairs[w] = list of (q_slot, kv_block, is_local)
+    pairs: list[list[tuple[int, int, bool]]] = [[] for _ in range(n_workers)]
+    for i, dep in enumerate(deps):
+        w = int(assignment[i])
+        for j in dep:
+            pairs[w].append((int(slot_of[i]), int(j),
+                             int(assignment[j]) == w))
+    pairs_per_worker = np.array([len(p) for p in pairs], dtype=np.int64)
+
+    # greedy: local pairs fill early steps; a pair consuming the arrival of
+    # round r runs at step >= r + 1; prefer oldest arrivals (short live
+    # ranges for the receive buffer).
+    step_sched: list[list[tuple[int, int, bool]]] = []
+    t_max = 0
+    for w in range(n_workers):
+        local = [p for p in pairs[w] if p[2]]
+        remote = sorted((p for p in pairs[w] if not p[2]),
+                        key=lambda p: arrival[(w, p[1])])
+        out: list[tuple[int, int, bool]] = []
+        li, ri, t = 0, 0, 0
+        while li < len(local) or ri < len(remote):
+            if (ri < len(remote)
+                    and arrival[(w, remote[ri][1])] + 1 <= t):
+                out.append(remote[ri])
+                ri += 1
+            elif li < len(local):
+                out.append(local[li])
+                li += 1
+            else:
+                out.append((-1, -1, True))       # stall: no-op step
+            t += 1
+        step_sched.append(out)
+        t_max = max(t_max, len(out))
+    n_steps = max(t_max, n_rounds + (1 if n_rounds else 0))
+
+    # ---- receive-buffer coloring -------------------------------------------
+    last_use: dict[tuple[int, int], int] = {}
+    for w, seq in enumerate(step_sched):
+        for t, (qs, j, is_local) in enumerate(seq):
+            if not is_local:
+                last_use[(w, j)] = t
+    arrivals_by_round = {(d, r): j
+                         for (d, j), r in arrival.items()}
+    alloc = plannerlib.allocate_recv_slots(
+        arrivals_by_round, last_use, n_rounds, n_workers)
+    ext = max(alloc.n_slots, 1 if n_rounds else 0)
+
+    # ---- reshuffle plan ------------------------------------------------------
+    resh_edges = plannerlib.build_reshuffle_edges(stream_owner, assignment)
+    resh_matchings = plannerlib.decompose_matchings(resh_edges, n_workers)
+    n_resh = len(resh_matchings)
+
+    spec = StaticSpec(
+        n_workers=n_workers, block_size=block_size, slots=slots,
+        ext_slots=ext, n_rounds=n_rounds, n_steps=n_steps,
+        n_resh_rounds=n_resh,
+        comm_perms=tuple(_perm_of_matching(m) for m in matchings),
+        resh_perms=tuple(_perm_of_matching(m) for m in resh_matchings),
+        causal=causal)
+
+    arrays = _build_arrays(batch, spec, assignment, stream_owner, slot_of,
+                           matchings, resh_matchings, step_sched, arrival,
+                           alloc)
+    return Schedule(batch=batch, assignment=assignment, deps=deps, spec=spec,
+                    arrays=arrays, comm_edges=comm_edges,
+                    resh_edges=resh_edges, comm_matchings=matchings,
+                    stream_owner=stream_owner, slot_of_block=slot_of,
+                    pairs_per_worker=pairs_per_worker)
+
+
+def _block_meta(batch: BlockedBatch, bid: int) -> tuple[np.ndarray, np.ndarray]:
+    bs = batch.block_size
+    lo = bid * bs
+    return (batch.seg_ids[lo:lo + bs], batch.positions[lo:lo + bs])
+
+
+def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
+                  assignment: np.ndarray, stream_owner: np.ndarray,
+                  slot_of: np.ndarray,
+                  matchings: list[list[plannerlib.Edge]],
+                  resh_matchings: list[list[plannerlib.Edge]],
+                  step_sched: list[list[tuple[int, int, bool]]],
+                  arrival: dict[tuple[int, int], int],
+                  alloc: plannerlib.SlotAllocation) -> PlanArrays:
+    N, R, T = spec.n_workers, spec.n_rounds, spec.n_steps
+    R2, bs, slots = spec.n_resh_rounds, spec.block_size, spec.slots
+    kv_trash, q_trash = spec.kv_trash, spec.q_trash
+
+    send_slot = np.zeros((N, max(R, 1)), dtype=np.int32)
+    recv_slot = np.full((N, max(R, 1)), kv_trash, dtype=np.int32)
+    for r, m in enumerate(matchings):
+        for s, d, j in m:
+            send_slot[s, r] = slot_of[j]
+            recv_slot[d, r] = slots + alloc.slot_of_arrival[(d, r)]
+
+    n_blocks = batch.n_blocks
+    step_q = np.full((N, max(T, 1)), q_trash, dtype=np.int32)
+    step_kv = np.full((N, max(T, 1)), kv_trash, dtype=np.int32)
+    step_kv_blk = np.full((N, max(T, 1)), n_blocks, dtype=np.int32)
+    for w, seq in enumerate(step_sched):
+        for t, (qs, j, is_local) in enumerate(seq):
+            if qs < 0:
+                continue
+            step_q[w, t] = qs
+            step_kv_blk[w, t] = j
+            if is_local:
+                step_kv[w, t] = slot_of[j]
+            else:
+                r = arrival[(w, j)]
+                step_kv[w, t] = slots + alloc.slot_of_arrival[(w, r)]
+
+    # replicated per-block mask metadata (+ trash row of PADs)
+    blk_seg = np.concatenate(
+        [batch.seg_ids.reshape(n_blocks, bs),
+         np.full((1, bs), PAD_SEGMENT, np.int32)]).astype(np.int32)
+    blk_pos = np.concatenate(
+        [batch.positions.reshape(n_blocks, bs),
+         np.zeros((1, bs), np.int32)]).astype(np.int32)
+    sched_blk = np.full((N, slots + 1), n_blocks, dtype=np.int32)
+    for b in range(n_blocks):
+        sched_blk[int(assignment[b]), int(slot_of[b])] = b
+
+    resh_send = np.zeros((N, max(R2, 1)), dtype=np.int32)
+    resh_dst = np.full((N, max(R2, 1)), q_trash, dtype=np.int32)
+    rest_send = np.zeros((N, max(R2, 1)), dtype=np.int32)
+    rest_dst = np.full((N, max(R2, 1)), slots, dtype=np.int32)  # user trash
+    for r, m in enumerate(resh_matchings):
+        for u, w, b in m:
+            resh_send[u, r] = b % slots          # user slot on sender
+            resh_dst[w, r] = slot_of[b]          # schedule slot on receiver
+            # restore: o moves back w -> u (reversed matching, still a
+            # matching)
+            rest_send[w, r] = slot_of[b]
+            rest_dst[u, r] = b % slots
+
+    resh_local = np.full((N, slots), -1, dtype=np.int32)
+    rest_local = np.full((N, slots), -1, dtype=np.int32)
+    for b in range(batch.n_blocks):
+        u, w = int(stream_owner[b]), int(assignment[b])
+        if u == w:
+            resh_local[w, slot_of[b]] = b % slots
+            rest_local[u, b % slots] = slot_of[b]
+
+    return PlanArrays(
+        send_slot=send_slot, recv_slot=recv_slot, step_q=step_q,
+        step_kv=step_kv, step_kv_blk=step_kv_blk, sched_blk=sched_blk,
+        blk_seg=blk_seg, blk_pos=blk_pos,
+        resh_send_slot=resh_send, resh_dst_slot=resh_dst,
+        resh_local_src=resh_local, restore_send_slot=rest_send,
+        restore_dst_slot=rest_dst, restore_local_src=rest_local)

@@ -1,0 +1,2 @@
+from . import distributions, loader
+from .loader import Batch, LoaderState, SyntheticLoader

@@ -1,0 +1,308 @@
+"""Pallas TPU flash-attention kernel with segment-id varlen masking.
+
+The per-device compute hot spot of FCP: attention between one (packed,
+variable-length) query block and one KV block.  The paper uses
+FlashAttention-3 "with minor modifications" (§5) — its modification is
+exactly varlen/segment masking for packed blocks, which is what this
+kernel provides natively through ``(segment_id, position)`` metadata.
+
+TPU adaptation (DESIGN.md §2): tiles are MXU-aligned (128 multiples),
+``BlockSpec``s stage q/k/v tiles HBM→VMEM, the kv grid axis is the
+innermost (sequential) axis so the f32 accumulator lives in VMEM scratch
+across kv tiles, and masking is computed on the fly from seg/pos tiles
+(no O(Sq·Sk) mask in HBM).
+
+Layouts follow ``ref.py``: q [H, Sq, D], k/v [KH, Sk, D] → o [H, Sq, D],
+lse [H, Sq].  Forward and backward (dq, dk, dv) kernels are provided;
+``ops.py`` wires them into a ``custom_vjp``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF, PAD_SEGMENT
+
+
+def _vmem_scratch(shape):
+    return pltpu.VMEM(shape, jnp.float32)
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+
+
+def _mask_tile(seg_q, pos_q, seg_k, pos_k, causal: bool):
+    ok = (seg_q[:, None] == seg_k[None, :]) & (seg_q[:, None] != PAD_SEGMENT)
+    if causal:
+        ok &= pos_q[:, None] >= pos_k[None, :]
+    return ok
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
+                o_ref, lse_ref,
+                acc_ref, m_ref, l_ref,
+                *, scale: float, causal: bool, n_kv_tiles: int):
+    j = pl.program_id(2)                       # kv tile (innermost, seq.)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # [bq, d]
+    k = k_ref[0].astype(jnp.float32)           # [bk, d]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...], pk_ref[...],
+                      causal)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # [bq]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(j == n_kv_tiles - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.maximum(l, 1e-37)
+        o_ref[0] = jnp.where(l[:, None] > 0, acc_ref[...] / safe[:, None],
+                             0.0).astype(o_ref.dtype)
+        lse_ref[0] = jnp.where(l > 0, m_ref[...] + jnp.log(safe), NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_fwd(q, k, v, seg_q, pos_q, seg_k, pos_k, *,
+                        causal: bool = True, scale: float | None = None,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False):
+    """Pallas forward. Returns (o [H,Sq,D] f32, lse [H,Sq] f32)."""
+    h, sq, d = q.shape
+    kh, sk, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    n_q = sq // block_q
+    n_k = sk // block_k
+    grid = (h, n_q, n_k)
+
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                               n_kv_tiles=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda hh, i, j, g=group: (hh // g, j, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda hh, i, j, g=group: (hh // g, j, 0)),
+            pl.BlockSpec((block_q,), lambda hh, i, j: (i,)),
+            pl.BlockSpec((block_q,), lambda hh, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda hh, i, j: (j,)),
+            pl.BlockSpec((block_k,), lambda hh, i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, block_q), lambda hh, i, j: (hh, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            # f32 accumulators living across the kv grid dimension
+            _vmem_scratch((block_q, d)),
+            _vmem_scratch((block_q,)),
+            _vmem_scratch((block_q,)),
+        ],
+        interpret=interpret,
+    )(q, k, v, seg_q, pos_q, seg_k, pos_k)
+
+
+# --------------------------------------------------------------------------
+# backward
+# --------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
+                   lse_ref, do_ref, delta_ref, dlse_ref,
+                   dq_ref, dq_acc,
+                   *, scale: float, causal: bool, n_kv_tiles: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    dlse = dlse_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...], pk_ref[...],
+                      causal)
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+    dov = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ds = p * (dov - delta[:, None] + dlse[:, None]) * scale
+    dq_acc[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_kv_tiles - 1)
+    def _done():
+        dq_ref[0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
+                    lse_ref, do_ref, delta_ref, dlse_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc,
+                    *, scale: float, causal: bool, n_q_tiles: int,
+                    group: int):
+    # grid = (kh, n_k, group, n_q): the (group, q-tile) sweep is innermost
+    # so each dk/dv output block (kh, j) is visited contiguously and the
+    # scratch accumulators span exactly one kv tile's lifetime.
+    i = pl.program_id(3)                        # q tile (innermost)
+    g = pl.program_id(2)                        # group member of kv head
+
+    @pl.when(jnp.logical_and(i == 0, g == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    dlse = dlse_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...], pk_ref[...],
+                      causal)
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)       # [bq, bk]
+    dv_acc[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dov = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ds = p * (dov - delta[:, None] + dlse[:, None]) * scale
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(i == n_q_tiles - 1, g == group - 1))
+    def _done():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_bwd(q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse,
+                        do, dlse, *, causal: bool = True,
+                        scale: float | None = None,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False):
+    """Pallas backward: returns (dq, dk, dv) in input dtypes.
+
+    ``dlse`` is the cotangent of the lse output (non-zero when the result
+    participates in a downstream flash merge — the FCP executor's case).
+    """
+    h, sq, d = q.shape
+    kh, sk, _ = k.shape
+    group = h // kh
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    n_q, n_k = sq // block_q, sk // block_k
+    do32 = do.astype(jnp.float32)
+    delta = jnp.sum(do32 * o.astype(jnp.float32), axis=-1)    # [H, Sq]
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          n_kv_tiles=n_k),
+        grid=(h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda hh, i, j, g=group: (hh // g, j, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda hh, i, j, g=group: (hh // g, j, 0)),
+            pl.BlockSpec((block_q,), lambda hh, i, j: (i,)),
+            pl.BlockSpec((block_q,), lambda hh, i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda hh, i, j: (j,)),
+            pl.BlockSpec((block_k,), lambda hh, i, j: (j,)),
+            pl.BlockSpec((1, block_q), lambda hh, i, j: (hh, i)),
+            pl.BlockSpec((1, block_q, d), lambda hh, i, j: (hh, i, 0)),
+            pl.BlockSpec((1, block_q), lambda hh, i, j: (hh, i)),
+            pl.BlockSpec((1, block_q), lambda hh, i, j: (hh, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, i, j: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[_vmem_scratch((block_q, d))],
+        interpret=interpret,
+    )(q, k, v, seg_q, pos_q, seg_k, pos_k, lse, do, delta, dlse)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          n_q_tiles=n_q, group=group),
+        grid=(kh, n_k, group, n_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d),
+                         lambda kk, j, g, i, gr=group: (kk * gr + g, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda kk, j, g, i: (kk, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda kk, j, g, i: (kk, j, 0)),
+            pl.BlockSpec((block_q,), lambda kk, j, g, i: (i,)),
+            pl.BlockSpec((block_q,), lambda kk, j, g, i: (i,)),
+            pl.BlockSpec((block_k,), lambda kk, j, g, i: (j,)),
+            pl.BlockSpec((block_k,), lambda kk, j, g, i: (j,)),
+            pl.BlockSpec((1, block_q),
+                         lambda kk, j, g, i, gr=group: (kk * gr + g, i)),
+            pl.BlockSpec((1, block_q, d),
+                         lambda kk, j, g, i, gr=group: (kk * gr + g, i, 0)),
+            pl.BlockSpec((1, block_q),
+                         lambda kk, j, g, i, gr=group: (kk * gr + g, i)),
+            pl.BlockSpec((1, block_q),
+                         lambda kk, j, g, i, gr=group: (kk * gr + g, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda kk, j, g, i: (kk, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda kk, j, g, i: (kk, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        scratch_shapes=[_vmem_scratch((block_k, d)), _vmem_scratch((block_k, d))],
+        interpret=interpret,
+    )(q, k, v, seg_q, pos_q, seg_k, pos_k, lse, do, delta, dlse)
+
+    return dq, dk, dv

@@ -1,0 +1,96 @@
+"""Jit'd public attention ops with implementation dispatch.
+
+``block_attention`` is the primitive the FCP executor (and the dense
+models) build on: normalized attention + lse over one (q, kv) range with
+segment/position masking.
+
+* ``impl="pallas"`` — the TPU kernel (``flash_attention.py``) behind a
+  ``custom_vjp`` (Pallas forward + backward kernels).  Validated in
+  interpret mode on CPU; the real target is TPU.
+* ``impl="xla"``    — chunked pure-jnp flash (``ref.py``), plain autodiff.
+  Portable path used on CPU and for 512-device dry-run lowering.
+* ``impl="ref"``    — dense oracle (tests only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import flash_attention as fa
+from . import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    causal: bool = True
+    scale: float | None = None
+    block_q: int = fa.DEFAULT_BLOCK_Q
+    block_k: int = fa.DEFAULT_BLOCK_K
+    interpret: bool = False
+    xla_chunk: int = 512
+
+
+def _float0(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pallas_attention(cfg: KernelConfig, q, k, v, seg_q, pos_q, seg_k,
+                      pos_k):
+    return fa.flash_attention_fwd(
+        q, k, v, seg_q, pos_q, seg_k, pos_k, causal=cfg.causal,
+        scale=cfg.scale, block_q=cfg.block_q, block_k=cfg.block_k,
+        interpret=cfg.interpret)
+
+
+def _pallas_fwd(cfg, q, k, v, seg_q, pos_q, seg_k, pos_k):
+    o, lse = _pallas_attention(cfg, q, k, v, seg_q, pos_q, seg_k, pos_k)
+    return (o, lse), (q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse)
+
+
+def _pallas_bwd(cfg, res, cot):
+    q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse = res
+    do, dlse = cot
+    dq, dk, dv = fa.flash_attention_bwd(
+        q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse, do, dlse,
+        causal=cfg.causal, scale=cfg.scale, block_q=cfg.block_q,
+        block_k=cfg.block_k, interpret=cfg.interpret)
+    return (dq, dk, dv, _float0(seg_q), _float0(pos_q), _float0(seg_k),
+            _float0(pos_k))
+
+
+_pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+def block_attention(q, k, v, seg_q, pos_q, seg_k, pos_k, *,
+                    causal: bool = True, scale: float | None = None,
+                    impl: str = "xla",
+                    block_q: int = fa.DEFAULT_BLOCK_Q,
+                    block_k: int = fa.DEFAULT_BLOCK_K,
+                    interpret: bool = False,
+                    xla_chunk: int = 512):
+    """Normalized attention + lse over one (q, kv) pair of token ranges.
+
+    q: [H, Sq, D]; k/v: [KH, Sk, D] → (o [H, Sq, D] f32, lse [H, Sq] f32).
+    Merge partial results over disjoint KV with ``ref.merge_partials``.
+    """
+    if impl == "pallas":
+        cfg = KernelConfig(causal=causal, scale=scale, block_q=block_q,
+                           block_k=block_k, interpret=interpret)
+        return _pallas_attention(cfg, q, k, v, seg_q, pos_q, seg_k, pos_k)
+    if impl == "xla":
+        return ref.chunked_attention(q, k, v, seg_q, pos_q, seg_k, pos_k,
+                                     causal, chunk=xla_chunk, scale=scale)
+    if impl == "ref":
+        return ref.reference_attention(q, k, v, seg_q, pos_q, seg_k, pos_k,
+                                       causal, scale)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+merge_partials = ref.merge_partials
+merge_many = ref.merge_many

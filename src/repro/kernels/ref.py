@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for the attention kernels.
+
+Conventions shared by every implementation in this package:
+
+* layouts are head-leading: ``q: [H, Sq, D]``, ``k/v: [KH, Sk, D]``,
+  ``o: [H, Sq, D]``, ``lse: [H, Sq]`` (GQA: query head ``h`` reads kv head
+  ``h // (H // KH)``),
+* masking is entirely described by per-token ``(segment_id, position)``:
+  ``valid = (seg_q == seg_k) & (seg_q != PAD) & (~causal | pos_q >= pos_k)``,
+* outputs are *normalized within the call* plus a log-sum-exp, so partial
+  results over disjoint KV ranges merge exactly with :func:`merge_partials`
+  — the primitive the FCP executor builds distributed attention from,
+* fully-masked query rows return ``o = 0`` and ``lse = NEG_INF``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+PAD_SEGMENT = -1
+
+
+def mask_matrix(seg_q: jax.Array, pos_q: jax.Array, seg_k: jax.Array,
+                pos_k: jax.Array, causal: bool) -> jax.Array:
+    """[Sq, Sk] bool validity mask."""
+    ok = (seg_q[:, None] == seg_k[None, :]) & (seg_q[:, None] != PAD_SEGMENT)
+    if causal:
+        ok &= pos_q[:, None] >= pos_k[None, :]
+    return ok
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        seg_q: jax.Array, pos_q: jax.Array,
+                        seg_k: jax.Array, pos_k: jax.Array,
+                        causal: bool = True,
+                        scale: float | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Dense oracle. Returns ``(o [H,Sq,D], lse [H,Sq])`` in f32."""
+    h, sq, d = q.shape
+    kh = k.shape[0]
+    assert h % kh == 0
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    group = h // kh
+    # keep k/v in their storage dtype; accumulate in f32 via
+    # preferred_element_type (avoids materializing f32 cache copies —
+    # the Pallas kernel does this per-tile in VMEM; §Perf C2)
+    kx = jnp.repeat(k, group, axis=0)            # [H, Sk, D]
+    vx = jnp.repeat(v, group, axis=0)
+    s = jax.lax.dot_general(
+        q, kx, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+    m = mask_matrix(seg_q, pos_q, seg_k, pos_k, causal)
+    s = jnp.where(m[None], s, NEG_INF)
+    smax = jnp.max(s, axis=-1)                   # [H, Sq]
+    p = jnp.where(m[None], jnp.exp(s - smax[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)                      # [H, Sq]
+    o = jax.lax.dot_general(p, vx, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    safe_l = jnp.maximum(l, 1e-37)
+    o = jnp.where(l[..., None] > 0, o / safe_l[..., None], 0.0)
+    lse = jnp.where(l > 0, smax + jnp.log(safe_l), NEG_INF)
+    return o, lse
+
+
+def merge_partials(o_a: jax.Array, lse_a: jax.Array,
+                   o_b: jax.Array, lse_b: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Exactly combine two normalized partial attentions over disjoint KV
+    sets (flash-attention merge; associative and commutative)."""
+    lse = jnp.logaddexp(lse_a, lse_b)
+    wa = jnp.exp(lse_a - lse)
+    wb = jnp.exp(lse_b - lse)
+    o = o_a * wa[..., None] + o_b * wb[..., None]
+    return o, lse
+
+
+def merge_many(os: jax.Array, lses: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Merge partials stacked on axis 0 (used by CP decode's psum-merge)."""
+    lse = jax.scipy.special.logsumexp(lses, axis=0)
+    w = jnp.exp(lses - lse[None])
+    o = jnp.sum(os * w[..., None], axis=0)
+    return o, lse
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      seg_q: jax.Array, pos_q: jax.Array,
+                      seg_k: jax.Array, pos_k: jax.Array,
+                      causal: bool = True, chunk: int = 512,
+                      scale: float | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Flash-style chunked jnp attention (the ``xla`` impl).
+
+    ``lax.scan`` over KV chunks with a running (o, lse); O(Sq·chunk) live
+    memory instead of O(Sq·Sk). This is the portable path used on CPU and
+    in the 512-device dry-run lowering (the Pallas path targets real TPUs).
+    """
+    h, sq, d = q.shape
+    sk = k.shape[1]
+    if sk <= chunk:
+        return reference_attention(q, k, v, seg_q, pos_q, seg_k, pos_k,
+                                   causal, scale)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        seg_k = jnp.pad(seg_k, (0, pad), constant_values=PAD_SEGMENT)
+        pos_k = jnp.pad(pos_k, (0, pad))
+    kc = k.reshape(k.shape[0], n_chunks, chunk, d).swapaxes(0, 1)
+    vc = v.reshape(v.shape[0], n_chunks, chunk, d).swapaxes(0, 1)
+    segc = seg_k.reshape(n_chunks, chunk)
+    posc = pos_k.reshape(n_chunks, chunk)
+
+    def step(carry, x):
+        o_acc, lse_acc = carry
+        kc_, vc_, sg_, ps_ = x
+        o_c, lse_c = reference_attention(q, kc_, vc_, seg_q, pos_q, sg_, ps_,
+                                         causal, scale)
+        return merge_partials(o_acc, lse_acc, o_c, lse_c), None
+
+    o0 = jnp.zeros((h, sq, d), jnp.float32)
+    lse0 = jnp.full((h, sq), NEG_INF, jnp.float32)
+    (o, lse), _ = jax.lax.scan(step, (o0, lse0), (kc, vc, segc, posc))
+    return o, lse

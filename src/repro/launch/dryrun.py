@@ -1,0 +1,280 @@
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers and
+compiles on the production mesh, and extract roofline terms.
+
+MUST set the host-device count before ANY other import (jax locks the
+device count at first init)::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm_1_6b \
+        --shape train_4k --mesh single
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json``
+(memory analysis, cost analysis, per-kind collective bytes, roofline
+terms).  ``--all`` sweeps the full 40-cell matrix on both meshes,
+skipping cells whose JSON already exists.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..analysis import roofline as rl
+from ..configs.base import (ARCH_NAMES, SHAPES, ModelConfig, ParallelConfig,
+                            TrainConfig, get_config)
+from ..models import Model
+from ..optimizer import adamw
+from ..parallel import sharding as sh
+from . import serve as servelib
+from . import train as trainlib
+from .mesh import make_production_mesh
+
+OUT_DIR = pathlib.Path("experiments/dryrun")
+BLOCK = 4096
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str, multi_pod: bool = False
+                ) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the step being
+    lowered (weak-type correct, shardable, no device allocation)."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    pods = 2 if multi_pod else 1
+    cp, tp = 16, 16
+    if shp.kind in ("train", "prefill"):
+        per_pod_batch = shp.global_batch // pods
+        tpw = per_pod_batch * shp.seq_len // cp
+        F = pods * cp
+        batch = {
+            "tokens": sds((F, tpw), jnp.int32),
+            "labels": sds((F, tpw), jnp.int32),
+            "positions": sds((F, tpw), jnp.int32),
+            "loss_mask": sds((F, tpw), jnp.float32),
+        }
+        if cfg.frontend_dim:
+            nfe = min(256, tpw)
+            batch["frontend_embeds"] = sds((F, nfe, cfg.frontend_dim),
+                                           jnp.bfloat16)
+            batch["frontend_mask"] = sds((F, tpw), jnp.bool_)
+        return batch
+    # decode
+    b = max(shp.global_batch // pods, 1) if shp.global_batch >= pods \
+        else shp.global_batch
+    return {"tokens": sds((b,), jnp.int32), "pos": sds((b,), jnp.int32)}
+
+
+def _schedule_for(cfg: ModelConfig, shp, pods: int, cp: int,
+                  pcfg: ParallelConfig):
+    per_pod_batch = shp.global_batch // pods
+    tpw = per_pod_batch * shp.seq_len // cp
+    seqlens = [shp.seq_len] * per_pod_batch
+    return trainlib.build_schedule(cfg, pcfg, seqlens, cp, tpw), tpw
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             block_size: int = BLOCK,
+             pcfg: ParallelConfig | None = None) -> dict:
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "multi" if multi_pod else "single",
+              "status": "ok"}
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        record["status"] = "skipped(full-attention)"
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pods = 2 if multi_pod else 1
+    cp, tp = 16, 16
+    chips = pods * cp * tp
+    model = Model(cfg, tp=tp)
+    if pcfg is None:
+        pcfg = ParallelConfig(block_size=block_size, attention_impl="xla")
+    record["pcfg"] = {
+        "block_size": pcfg.block_size, "remat_policy": pcfg.remat_policy,
+        "chunked_loss": pcfg.chunked_loss,
+        "attn_out_bf16": pcfg.attn_out_bf16, "locality": pcfg.locality}
+    block_size = pcfg.block_size
+    t0 = time.time()
+
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    record["param_count"] = int(sum(
+        np.prod(x.shape) for x in jax.tree.leaves(params_sds)))
+
+    if shp.kind == "train":
+        sched, tpw = _schedule_for(cfg, shp, pods, cp, pcfg)
+        attn = trainlib.make_fcp_attn_fn(sched, mesh, pcfg) \
+            if cfg.uses_attention else None
+        record["schedule"] = {
+            "rounds": sched.spec.n_rounds, "steps": sched.spec.n_steps,
+            "resh_rounds": sched.spec.n_resh_rounds,
+            "slots": sched.spec.slots, "ext_slots": sched.spec.ext_slots,
+        }
+        tcfg = TrainConfig()
+        opt_sds = jax.eval_shape(adamw.init, params_sds)
+        step = trainlib.build_train_step(model, mesh, pcfg, tcfg, attn)
+        jitted = trainlib.jit_train_step(step, mesh, params_sds, opt_sds,
+                                         None, input_specs(
+                                             arch, shape_name, multi_pod))
+        lowered = jitted.lower(params_sds, opt_sds, None,
+                               input_specs(arch, shape_name, multi_pod))
+        tokens = shp.global_batch * shp.seq_len
+        kind = "train"
+    elif shp.kind == "prefill":
+        sched, tpw = _schedule_for(cfg, shp, pods, cp, pcfg)
+        attn = trainlib.make_fcp_attn_fn(sched, mesh, pcfg) \
+            if cfg.uses_attention else None
+        record["schedule"] = {
+            "rounds": sched.spec.n_rounds, "steps": sched.spec.n_steps,
+            "resh_rounds": sched.spec.n_resh_rounds,
+            "slots": sched.spec.slots, "ext_slots": sched.spec.ext_slots,
+        } if cfg.uses_attention else {}
+        # batch_size is GLOBAL; frames = pods*cp and stream is seq-major
+        prefill = servelib.build_prefill_step(
+            model, mesh, attn, batch_size=shp.global_batch,
+            seq_len=shp.seq_len)
+        psh = sh.param_shardings(params_sds, mesh, fsdp=True)
+        bsh = sh.batch_shardings(input_specs(arch, shape_name, multi_pod),
+                                 mesh)
+        cache_sds = jax.eval_shape(
+            lambda p, b: prefill(p, b)[1], params_sds,
+            input_specs(arch, shape_name, multi_pod))
+        batch_axis, seq_axes = servelib.cache_specs(cfg, mesh, "decode")
+        csh = servelib.decode_cache_shardings(cache_sds, mesh, batch_axis,
+                                              seq_axes)
+        osh = (NamedSharding(mesh, P(("pod", "data") if multi_pod
+                                     else "data", "model")), csh)
+        lowered = jax.jit(prefill, in_shardings=(psh, bsh),
+                          out_shardings=osh).lower(
+            params_sds, input_specs(arch, shape_name, multi_pod))
+        tokens = shp.global_batch * shp.seq_len
+        kind = "inference"
+    else:  # decode
+        kind_key = "long" if shape_name == "long_500k" else "decode"
+        b = input_specs(arch, shape_name, multi_pod)["tokens"].shape[0]
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(b, shp.seq_len))
+        step, batch_axis, seq_axes = servelib.build_decode_step(
+            model, mesh, kind_key)
+        if multi_pod and batch_axis == "data" and b >= 32:
+            batch_axis = ("pod", "data")
+        jitted = servelib.jit_decode_step(step, mesh, params_sds,
+                                          cache_sds, b, batch_axis,
+                                          seq_axes)
+        ins = input_specs(arch, shape_name, multi_pod)
+        lowered = jitted.lower(params_sds, ins["tokens"], ins["pos"],
+                               cache_sds)
+        tokens = shp.global_batch            # one token per sample
+        kind = "inference"
+
+    record["lower_s"] = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = time.time() - t1
+    record["memory"] = rl.memory_stats(compiled)
+    xla_chunk = 512
+    score_dims = ((block_size, min(xla_chunk, block_size)),
+                  (block_size, block_size),
+                  (shp.seq_len, min(xla_chunk, shp.seq_len)))
+    roof, extras = rl.analyze(compiled, chips, score_dims)
+    record.update(extras)
+    record["hlo_flops_raw"] = roof.flops     # undercounts scan bodies
+    import dataclasses as _dc
+    roof = _dc.replace(roof, flops=rl.analytic_flops(
+        cfg, shp.seq_len, shp.global_batch,
+        "decode" if shp.kind == "decode" else shp.kind))
+    record["roofline"] = roof.to_dict()
+    n_active = cfg.active_param_count()
+    record["model_flops"] = rl.model_flops(n_active, tokens,
+                                           "train" if kind == "train"
+                                           else "inference")
+    record["useful_ratio"] = (record["model_flops"]
+                              / max(roof.flops, 1.0))
+    return record
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="single", choices=["single", "multi"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--block-size", type=int, default=BLOCK)
+    # §Perf hillclimb knobs (baseline = defaults)
+    p.add_argument("--remat-policy", default="dots",
+                   choices=["dots", "nothing"])
+    p.add_argument("--chunked-loss", action="store_true")
+    p.add_argument("--attn-out-bf16", action="store_true")
+    p.add_argument("--no-locality", action="store_true")
+    p.add_argument("--suffix", default="",
+                   help="output-file suffix for perf-iteration records")
+    args = p.parse_args(argv)
+    pcfg = ParallelConfig(
+        block_size=args.block_size, attention_impl="xla",
+        remat_policy=args.remat_policy, chunked_loss=args.chunked_loss,
+        attn_out_bf16=args.attn_out_bf16,
+        locality="off" if args.no_locality else "auto")
+
+    cells = []
+    if args.all:
+        for mesh in ("single", "multi"):
+            for arch in ARCH_NAMES:
+                for shape in SHAPES:
+                    cells.append((arch, shape, mesh))
+    else:
+        if not args.arch or not args.shape:
+            raise SystemExit("--arch/--shape required unless --all")
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch, shape, mesh in cells:
+        out = OUT_DIR / f"{arch}__{shape}__{mesh}{args.suffix}.json"
+        if out.exists() and not args.force:
+            print(f"[skip] {out.name} exists")
+            continue
+        print(f"[cell] {arch} × {shape} × {mesh} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape, mesh == "multi", args.block_size,
+                           pcfg=pcfg)
+        except Exception as e:           # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "status": f"FAILED: {type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+        rec["wall_s"] = time.time() - t0
+        rl.write_json(out, rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dominant={r['dominant']}"
+                     f" comp={r['compute_s']:.4f}s"
+                     f" mem={r['memory_s']:.4f}s"
+                     f" coll={r['collective_s']:.4f}s")
+        print(f"[done] {arch}×{shape}×{mesh}: {status}"
+              f" ({rec['wall_s']:.0f}s){extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

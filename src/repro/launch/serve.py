@@ -1,0 +1,226 @@
+"""Serving steps: batched prefill (FCP attention) and CP decode.
+
+* ``build_prefill_step`` — packed-stream forward through FCP attention,
+  emitting logits + the KV cache re-laid-out as ``[L, B, S, KH, D]``
+  (stream order is sequence-major for uniform shapes, so this is a
+  reshape, not a shuffle).  SSM/hybrid prefill emits recurrent states.
+* ``build_decode_step`` — one token for the whole batch against a
+  sequence-sharded cache: ``cp_decode_attention`` (pmax/psum flash merge)
+  + ``cp_cache_update`` (collective-free masked write).
+
+The decode_32k cell shards cache over (data: batch, model: sequence);
+long_500k (batch=1) shards sequence over (data, model) jointly — the only
+way 524K tokens x layers of cache fit per chip (DESIGN.md §4.3).
+
+CLI: PYTHONPATH=src python -m repro.launch.serve --arch stablelm_1_6b \
+        --smoke --mesh 4x2 --tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import (ModelConfig, ParallelConfig, apply_overrides,
+                            get_config, smoke_config)
+from ..core import executor as ex
+from ..models import Model, dense_attn_fn
+from ..models import hybrid as hybridlib
+from ..models import ssm as ssmlib
+from ..models import transformer as tflib
+from ..parallel import sharding as sh
+
+
+def cache_specs(cfg: ModelConfig, mesh, kind: str):
+    """PartitionSpecs for decode caches.
+
+    decode_32k: batch over data, cache seq over model.
+    long_500k (batch=1): cache seq over (data, model)."""
+    if kind == "long":
+        batch_axis = None
+        seq_axes = tuple(a for a in ("data", "model") if a in
+                         mesh.axis_names)
+    else:
+        batch_axis = "data" if "data" in mesh.axis_names else None
+        seq_axes = ("model",) if "model" in mesh.axis_names else ()
+    return batch_axis, seq_axes
+
+
+def build_decode_fns(cfg: ModelConfig, mesh, kind: str,
+                     impl: str = "xla"):
+    batch_axis, seq_axes = cache_specs(cfg, mesh, kind)
+    ecfg = ex.ExecConfig(impl=impl)
+    if not seq_axes:
+        from ..models import dense_cache_update, dense_decode_attn
+        return dense_decode_attn, dense_cache_update, batch_axis, seq_axes
+    attn = functools.partial(ex.cp_decode_attention, mesh=mesh,
+                             batch_axis=batch_axis, seq_axes=seq_axes,
+                             cfg=ecfg)
+    upd = functools.partial(ex.cp_cache_update, mesh=mesh,
+                            batch_axis=batch_axis, seq_axes=seq_axes)
+    return (lambda q, kc, vc, ln: attn(q, kc, vc, ln)), \
+        (lambda c, n, p: upd(c, n, p)), batch_axis, seq_axes
+
+
+def build_decode_step(model: Model, mesh, kind: str, impl: str = "xla"):
+    cfg = model.cfg
+    attn_fn, upd_fn, batch_axis, seq_axes = build_decode_fns(
+        cfg, mesh, kind, impl)
+
+    def decode_step(params, tokens, pos, cache):
+        logits, cache = model.decode_step(params, tokens, pos, cache,
+                                          attn_fn, upd_fn)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return decode_step, batch_axis, seq_axes
+
+
+def decode_cache_shardings(cache, mesh, batch_axis, seq_axes):
+    def one(path, x):
+        name = getattr(path[-1], "key", None)
+        if name in ("k", "v"):          # [L|G, B, S, KH, D]
+            return NamedSharding(mesh, P(None, batch_axis, seq_axes,
+                                         None, None))
+        if name == "state":             # [L, B, nh, hd, ds]
+            return NamedSharding(mesh, P(None, batch_axis, "model"
+                                         if "model" in mesh.axis_names
+                                         else None, None, None))
+        if name == "conv":              # [L, B, cw-1, C]
+            return NamedSharding(mesh, P(None, batch_axis, None, "model"
+                                         if "model" in mesh.axis_names
+                                         else None))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def jit_decode_step(decode_step, mesh, params_like, cache_like, batch_size,
+                    batch_axis, seq_axes, fsdp: bool = False):
+    psh = sh.param_shardings(params_like, mesh, mode="serve", fsdp=fsdp)
+    csh = decode_cache_shardings(cache_like, mesh, batch_axis, seq_axes)
+    tsh = NamedSharding(mesh, P(batch_axis))
+    rep = NamedSharding(mesh, P())
+    return jax.jit(decode_step,
+                   in_shardings=(psh, tsh, tsh, csh),
+                   out_shardings=(tsh, NamedSharding(
+                       mesh, P(batch_axis, "model"
+                               if "model" in mesh.axis_names else None)),
+                       csh),
+                   donate_argnums=(3,))
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def build_prefill_step(model: Model, mesh, attn_fn: Callable,
+                       batch_size: int, seq_len: int, remat: bool = True):
+    """Returns ``prefill_step(params, batch) -> (last_logits, cache)``."""
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.family == "ssm":
+            # per-sequence scans (vmap over batch) so each sequence gets
+            # its own final state / conv tail
+            f, t = batch["tokens"].shape
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            xb = x.reshape(batch_size, seq_len, cfg.d_model)
+            pos_b = batch["positions"].reshape(batch_size, seq_len)
+
+            def scan_fn(xb, lp):
+                out, (st, cv) = jax.vmap(
+                    lambda xi, pi: ssmlib.mamba_block(
+                        xi, lp, cfg, pi, return_state=True))(xb, pos_b)
+                return out, (st, cv)
+
+            xb, (states, convs) = jax.lax.scan(scan_fn, xb,
+                                               params["mamba"])
+            from ..models.layers import rms_norm
+            xl = rms_norm(xb[:, -1], params["final_norm"], cfg.norm_eps)
+            head = params["embed"].T if cfg.tie_embeddings \
+                else params["lm_head"]
+            logits = jnp.einsum("bd,dv->bv", xl, head)
+            return logits, {"state": states, "conv": convs}
+        if cfg.family == "hybrid":
+            return hybridlib.forward_prefill(params, cfg, batch, attn_fn,
+                                             batch_size, seq_len)
+        logits, ks, vs = tflib.forward_prefill(params, cfg, batch, attn_fn,
+                                               remat=remat)
+        # frames stream -> [L, B, S, KH, D] (stream is sequence-major)
+        lyr, f, t, kh, dh = ks.shape
+        ks = ks.reshape(lyr, batch_size, seq_len, kh, dh)
+        vs = vs.reshape(lyr, batch_size, seq_len, kh, dh)
+        # logits of each sequence's last token
+        lg = logits.reshape(batch_size, seq_len, -1)[:, -1]
+        return lg, {"k": ks, "v": vs}
+
+    return prefill_step
+
+
+# --------------------------------------------------------------------------
+# CLI driver: batched greedy decoding end-to-end
+# --------------------------------------------------------------------------
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--mesh", default="1x1")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--cache-len", type=int, default=256)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--tokens", type=int, default=16)
+    p.add_argument("--kind", default="decode", choices=["decode", "long"])
+    p.add_argument("--override", action="append", default=[])
+    args = p.parse_args(argv)
+
+    dims = [int(x) for x in args.mesh.split("x")]
+    axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    from .mesh import make_mesh
+    mesh = make_mesh(tuple(dims), axes)
+    tp = dict(zip(axes, dims)).get("model", 1)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = apply_overrides(cfg, args.override)
+    model = Model(cfg, tp=tp)
+    params = model.init(jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    cache = model.init_cache(args.batch, args.cache_len)
+    decode_step, batch_axis, seq_axes = build_decode_step(model, mesh,
+                                                          args.kind)
+    step = jit_decode_step(decode_step, mesh, params, cache, args.batch,
+                           batch_axis, seq_axes)
+
+    # feed the prompt token-by-token (teacher forcing), then decode
+    t0 = time.time()
+    toks = prompts[:, 0]
+    generated = []
+    for i in range(args.prompt_len + args.tokens - 1):
+        pos = jnp.full((args.batch,), i, jnp.int32)
+        nxt, logits, cache = step(params, jnp.asarray(toks), pos, cache)
+        if i + 1 < args.prompt_len:
+            toks = prompts[:, i + 1]
+        else:
+            toks = np.asarray(nxt)
+            generated.append(toks)
+    dt = time.time() - t0
+    gen = np.stack(generated, axis=1)
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({args.batch * gen.shape[1] / dt:.1f} tok/s)")
+    print("sample:", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

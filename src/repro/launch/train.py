@@ -1,0 +1,236 @@
+"""Training step assembly + CLI driver.
+
+``build_train_step`` wires: FCP schedule -> distributed attention closure
+-> model loss -> grads (+ optional error-feedback bf16 DP compression) ->
+AdamW, all under one jit with NamedSharding in/out (FSDP over data, TP
+over model, DP over pod) and donated state.
+
+CLI:  PYTHONPATH=src python -m repro.launch.train --arch stablelm_1_6b \
+          --shape train_4k --steps 20 --mesh 4x2 --dist real_world
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import (ModelConfig, ParallelConfig, TrainConfig,
+                            apply_overrides, get_config, smoke_config)
+from ..core import executor as ex
+from ..core.schedule import Schedule, make_schedule
+from ..data.loader import Batch, SyntheticLoader
+from ..models import Model, dense_attn_fn
+from ..optimizer import adamw, schedules
+from ..parallel import sharding as sh
+from ..runtime import compression
+
+
+def make_fcp_attn_fn(sched: Schedule, mesh, pcfg: ParallelConfig
+                     ) -> Callable:
+    tables = ex.schedule_tables(sched)
+    cfg_exec = ex.ExecConfig(
+        impl=pcfg.attention_impl,
+        out_dtype="bfloat16" if pcfg.attn_out_bf16 else None)
+    head_axis = pcfg.tp_axis if pcfg.tp_axis in mesh.axis_names else None
+
+    def attn(q, k, v):
+        return ex.fcp_attention(q, k, v, tables, spec=sched.spec, mesh=mesh,
+                                cp_axis=pcfg.cp_axis, head_axis=head_axis,
+                                cfg=cfg_exec)
+    return attn
+
+
+def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
+                   n_cp: int, tokens_per_worker: int,
+                   speeds: np.ndarray | None = None) -> Schedule:
+    tp = 1  # schedule is head-count agnostic (costs scale uniformly)
+    nh, nkv = cfg.padded_heads(tp)
+    return make_schedule(
+        seqlens, n_cp, tokens_per_worker, pcfg.block_size,
+        n_q_heads=max(nh, 1), n_kv_heads=max(nkv, 1),
+        head_dim=max(cfg.head_dim, 1), causal=True, speeds=speeds,
+        locality={"auto": "auto", "on": True, "off": False}.get(
+            str(pcfg.locality), pcfg.locality))
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: adamw.AdamWState
+    residual: dict | None = None           # grad-compression feedback
+
+    def tree(self):
+        t = {"params": self.params, "opt": self.opt}
+        if self.residual is not None:
+            t["residual"] = self.residual
+        return t
+
+
+def build_train_step(model: Model, mesh, pcfg: ParallelConfig,
+                     tcfg: TrainConfig, attn_fn: Callable | None):
+    def train_step(params, opt, residual, batch):
+        lr = schedules.warmup_cosine(
+            opt.step, peak_lr=tcfg.lr, warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.total_steps)
+
+        remat = pcfg.remat_policy if pcfg.remat else False
+
+        def loss_fn(p):
+            return model.loss(p, batch, attn_fn, remat=remat,
+                              chunked=pcfg.chunked_loss)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if tcfg.grad_compression:
+            # bf16 error-feedback compression of the cross-pod (DCN)
+            # gradient reduction (runtime/compression.py)
+            grads, residual = compression.compress_grads(grads, residual)
+            grads = compression.decompress_grads(grads)
+        params, opt, gnorm = adamw.update(
+            params, grads, opt, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        return params, opt, residual, loss, gnorm
+
+    return train_step
+
+
+def jit_train_step(train_step, mesh, params_like, opt_like, residual_like,
+                   batch_like, fsdp: bool = True):
+    psh = sh.param_shardings(params_like, mesh, fsdp=fsdp)
+    osh = adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=sh.param_shardings(opt_like.m, mesh, fsdp=fsdp),
+        v=sh.param_shardings(opt_like.v, mesh, fsdp=fsdp))
+    rsh = (sh.param_shardings(residual_like, mesh, fsdp=fsdp)
+           if residual_like is not None else None)
+    bsh = sh.batch_shardings(batch_like, mesh)
+    rep = NamedSharding(mesh, P())
+    return jax.jit(train_step,
+                   in_shardings=(psh, osh, rsh, bsh),
+                   out_shardings=(psh, osh, rsh, rep, rep),
+                   donate_argnums=(0, 1, 2))
+
+
+def batch_arrays(b: Batch, cfg: ModelConfig, rng=None) -> dict:
+    out = {
+        "tokens": jnp.asarray(b.tokens),
+        "labels": jnp.asarray(b.labels),
+        "positions": jnp.asarray(b.positions),
+        "loss_mask": jnp.asarray(b.loss_mask),
+    }
+    if cfg.frontend_dim:
+        f, t = b.tokens.shape
+        rng = rng or np.random.default_rng(0)
+        # frontend stub: first n_fe positions of each frame are "patches"
+        n_fe = min(256, t)
+        fe = rng.normal(size=(f, n_fe, cfg.frontend_dim)) * 0.02
+        mask = np.zeros((f, t), bool)
+        mask[:, :n_fe] = True
+        out["frontend_embeds"] = jnp.asarray(fe, jnp.float32)
+        out["frontend_mask"] = jnp.asarray(mask)
+        # no next-token loss on patch positions
+        out["loss_mask"] = out["loss_mask"] * (1.0 - mask.astype(np.float32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# CLI driver
+# --------------------------------------------------------------------------
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default=None,
+                   help="assigned shape cell (sets seq/batch)")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced smoke config")
+    p.add_argument("--steps", type=int, default=10)
+    p.add_argument("--mesh", default="1x1",
+                   help="DxM (data x model) or PxDxM host-device mesh")
+    p.add_argument("--dist", default="uniform",
+                   choices=["uniform", "real_world", "less_long_tailed",
+                            "bimodal"])
+    p.add_argument("--block-size", type=int, default=1024)
+    p.add_argument("--tokens-per-worker", type=int, default=8192)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--override", action="append", default=[])
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--log-every", type=int, default=1)
+    args = p.parse_args(argv)
+
+    dims = [int(x) for x in args.mesh.split("x")]
+    if len(dims) == 2:
+        mesh_axes = ("data", "model")
+    elif len(dims) == 3:
+        mesh_axes = ("pod", "data", "model")
+    else:
+        raise SystemExit("--mesh must be DxM or PxDxM")
+    from .mesh import make_mesh
+    mesh = make_mesh(tuple(dims), mesh_axes)
+    n_cp = dict(zip(mesh_axes, dims)).get("data", 1)
+    pods = dict(zip(mesh_axes, dims)).get("pod", 1)
+    tp = dict(zip(mesh_axes, dims)).get("model", 1)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = apply_overrides(cfg, args.override)
+    pcfg = ParallelConfig(block_size=args.block_size)
+    tcfg = TrainConfig(lr=args.lr, warmup_steps=2, total_steps=args.steps)
+
+    model = Model(cfg, tp=tp)
+    loader = SyntheticLoader(
+        dist=args.dist, n_frames=n_cp, tokens_per_worker=args.tokens_per_worker,
+        vocab_size=cfg.vocab_size, pods=pods, seed=tcfg.seed)
+
+    params = model.init(jax.random.key(tcfg.seed))
+    opt = adamw.init(params)
+    residual = (compression.init_residuals(params)
+                if tcfg.grad_compression else None)
+
+    step_cache: dict = {}
+    mgr = None
+    if args.checkpoint_dir:
+        from ..checkpoint import CheckpointManager
+        mgr = CheckpointManager(args.checkpoint_dir)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        b = loader.next()
+        batch = batch_arrays(b, cfg)
+        key = b.composition_id
+        if key not in step_cache:
+            if cfg.uses_attention:
+                sched = build_schedule(cfg, pcfg, b.seqlens, n_cp,
+                                       args.tokens_per_worker)
+                attn = make_fcp_attn_fn(sched, mesh, pcfg) if n_cp > 1 \
+                    else dense_attn_fn(jnp.asarray(b.seg_ids),
+                                       batch["positions"])
+            else:
+                attn = None
+            ts = build_train_step(model, mesh, pcfg, tcfg, attn)
+            step_cache[key] = jit_train_step(
+                ts, mesh, params, opt, residual, batch)
+        params, opt, residual, loss, gnorm = step_cache[key](
+            params, opt, residual, batch)
+        if step % args.log_every == 0:
+            print(f"step {step:5d}  loss {float(loss):.4f}  "
+                  f"gnorm {float(gnorm):.3f}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        if mgr and (step + 1) % 10 == 0:
+            mgr.save(step, {"params": params, "opt": opt},
+                     extra={"loader": loader.state.to_dict()},
+                     blocking=False)
+    if mgr:
+        mgr.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

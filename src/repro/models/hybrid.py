@@ -1,0 +1,206 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``attn_every`` layers (arXiv:2411.15242).
+
+The shared block is where FCP applies in this family: it attends over the
+full packed stream (the expensive long-context op), while the SSM layers
+remain attention-free.  Weights of the shared block are a single set; it
+is invoked ``n_layers / attn_every`` times; each invocation has its own
+KV cache at decode time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import ssm as S
+from .transformer import _attention_qkv  # reuse QKV plumbing
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, tp: int = 1):
+    assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+    nh, nkv = cfg.padded_heads(tp)
+    vpad = cfg.padded_vocab(tp)
+    d, dh, ff = cfg.d_model, cfg.head_dim, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    shared = {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "wq": L.normal(ks[0], (d, nh, dh), d ** -0.5, dt),
+        "wk": L.normal(ks[1], (d, nkv, dh), d ** -0.5, dt),
+        "wv": L.normal(ks[2], (d, nkv, dh), d ** -0.5, dt),
+        "wo": L.normal(ks[3], (nh, dh, d), (nh * dh) ** -0.5, dt),
+        "wi": L.normal(ks[4], (d, ff), d ** -0.5, dt),
+        "wg": L.normal(ks[5], (d, ff), d ** -0.5, dt),
+        "wdown": L.normal(ks[6], (ff, d), ff ** -0.5, dt),
+    }
+    if cfg.n_heads != nh:
+        shared["wq"] = shared["wq"].at[:, cfg.n_heads:].set(0.0)
+        shared["wo"] = shared["wo"].at[cfg.n_heads:].set(0.0)
+    return {
+        "embed": L.normal(ks[7], (vpad, d), 1.0, dt),
+        "mamba": S.init_mamba_layers(cfg, ks[8], cfg.n_layers, tp),
+        "shared_attn": shared,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": L.normal(ks[9], (d, vpad), d ** -0.5, dt),
+    }
+
+
+def _shared_attn_block(x, sp, cfg: ModelConfig, pos, attn_fn):
+    """x: [F, T, d]; shared attention + MLP block."""
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    lp = {k: v for k, v in sp.items()}
+    q, k, v = _attention_qkv(lp, cfg, h, pos)
+    o = attn_fn(q, k, v)
+    x = x + jnp.einsum("fthk,hkd->ftd", o.astype(x.dtype), sp["wo"])
+    h2 = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + L.swiglu(h2, sp["wi"], sp["wg"], sp["wdown"])
+
+
+def forward(params, cfg: ModelConfig, batch: dict, attn_fn: Callable,
+            remat=False, return_features: bool = False) -> jax.Array:
+    """Packed-stream forward.  batch: tokens/positions [F, T]."""
+    from .transformer import apply_remat
+    f, t = batch["tokens"].shape
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    pos = batch["positions"]
+    pos_flat = pos.reshape(f * t)
+    n_groups = cfg.n_layers // cfg.attn_every
+
+    def group(x, gp):
+        def one(x, lp):
+            xs = x.reshape(f * t, cfg.d_model)
+            xs = S.mamba_block(xs, lp, cfg, pos_flat)
+            return xs.reshape(f, t, cfg.d_model), None
+        one = apply_remat(one, remat)
+        x, _ = jax.lax.scan(one, x, gp)
+        return x
+
+    mamba = params["mamba"]
+    for g in range(n_groups):
+        gp = jax.tree.map(
+            lambda a, g=g: a[g * cfg.attn_every:(g + 1) * cfg.attn_every],
+            mamba)
+        x = group(x, gp)
+        blk = apply_remat(
+            functools.partial(_shared_attn_block, cfg=cfg, pos=pos,
+                              attn_fn=attn_fn), remat)
+        x = blk(x, params["shared_attn"])
+
+    if return_features:
+        return x
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("ftd,dv->ftv", x, params["lm_head"])
+
+
+def forward_prefill(params, cfg: ModelConfig, batch: dict,
+                    attn_fn: Callable, batch_size: int, seq_len: int):
+    """Prefill: logits of each sequence's last token + decode caches
+    (per-sequence SSM states/conv tails + shared-attn KV).
+
+    Mamba layers run vmapped per sequence (per-sequence final states);
+    the shared attention runs in the frames layout (FCP).  Stream order
+    is sequence-major, so the two layouts interconvert by reshape."""
+    f, t = batch["tokens"].shape
+    assert f * t == batch_size * seq_len
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    pos_f = batch["positions"]                         # frames layout
+    pos_b = pos_f.reshape(batch_size, seq_len)
+    n_groups = cfg.n_layers // cfg.attn_every
+    sp = params["shared_attn"]
+    states, convs, kss, vss = [], [], [], []
+
+    def mamba_b(xb, lp):
+        return jax.vmap(
+            lambda xi, pi: S.mamba_block(xi, lp, cfg, pi,
+                                         return_state=True))(xb, pos_b)
+
+    xb = x.reshape(batch_size, seq_len, cfg.d_model)
+    for g in range(n_groups):
+        for i in range(cfg.attn_every):
+            li = g * cfg.attn_every + i
+            lp = jax.tree.map(lambda a, li=li: a[li], params["mamba"])
+            xb, (st, cv) = mamba_b(xb, lp)
+            states.append(st)
+            convs.append(cv)
+        # shared attention in frames layout
+        xf = xb.reshape(f, t, cfg.d_model)
+        h = L.rms_norm(xf, sp["ln1"], cfg.norm_eps)
+        q, k, v = _attention_qkv(dict(sp), cfg, h, pos_f)
+        o = attn_fn(q, k, v)
+        xf = xf + jnp.einsum("fthk,hkd->ftd", o.astype(xf.dtype), sp["wo"])
+        h2 = L.rms_norm(xf, sp["ln2"], cfg.norm_eps)
+        xf = xf + L.swiglu(h2, sp["wi"], sp["wg"], sp["wdown"])
+        xb = xf.reshape(batch_size, seq_len, cfg.d_model)
+        kh, dh = k.shape[2], k.shape[3]
+        kss.append(k.astype(xf.dtype).reshape(batch_size, seq_len, kh, dh))
+        vss.append(v.astype(xf.dtype).reshape(batch_size, seq_len, kh, dh))
+
+    xl = L.rms_norm(xb[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", xl, params["lm_head"])
+    cache = {"state": jnp.stack(states), "conv": jnp.stack(convs),
+             "k": jnp.stack(kss), "v": jnp.stack(vss)}
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, tp: int = 1):
+    nh, nkv = cfg.padded_heads(tp)
+    n_inv = cfg.n_layers // cfg.attn_every
+    kv = (n_inv, batch, seq_len, nkv, cfg.head_dim)
+    c = S.init_ssm_cache(cfg, cfg.n_layers, batch, tp)
+    c["k"] = jnp.zeros(kv, jnp.dtype(cfg.param_dtype))
+    c["v"] = jnp.zeros(kv, jnp.dtype(cfg.param_dtype))
+    return c
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache,
+                decode_attn_fn: Callable, cache_update_fn: Callable):
+    """tokens: [B]; pos: [B]. Returns (logits [B, V], cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)            # [B, d]
+    n_groups = cfg.n_layers // cfg.attn_every
+    sp = params["shared_attn"]
+    new_states, new_convs, new_ks, new_vs = [], [], [], []
+    for g in range(n_groups):
+        for i in range(cfg.attn_every):
+            li = g * cfg.attn_every + i
+            lp = jax.tree.map(lambda a, li=li: a[li], params["mamba"])
+            x, st, cv = S.mamba_decode_step(
+                x, lp, cache["state"][li], cache["conv"][li], cfg)
+            new_states.append(st)
+            new_convs.append(cv)
+        # shared attention invocation g
+        h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, sp["wq"])
+        k = jnp.einsum("bd,dhk->bhk", h, sp["wk"])
+        v = jnp.einsum("bd,dhk->bhk", h, sp["wv"])
+        posf = pos[:, None]
+        q = L.rope(q[:, None], posf, cfg.rope_theta)[:, 0]
+        k = L.rope(k[:, None], posf, cfg.rope_theta)[:, 0]
+        kc = cache_update_fn(cache["k"][g], k, pos)
+        vc = cache_update_fn(cache["v"][g], v, pos)
+        new_ks.append(kc)
+        new_vs.append(vc)
+        o = decode_attn_fn(q, kc, vc, pos + 1)
+        x = x + jnp.einsum("bhk,hkd->bd", o.astype(x.dtype), sp["wo"])
+        h2 = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(h2, sp["wi"], sp["wg"], sp["wdown"])
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+    cache = {
+        "state": jnp.stack(new_states),
+        "conv": jnp.stack(new_convs),
+        "k": jnp.stack(new_ks),
+        "v": jnp.stack(new_vs),
+    }
+    return logits, cache

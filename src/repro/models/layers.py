@@ -1,0 +1,105 @@
+"""Shared neural-net layers (pure JAX, explicit param pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def gated_rms_norm(x: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba2's normalization: RMSNorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    w, eps)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., T, H, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq      # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]                           # [..., T, 1, h]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x32_1 * cos - x32_2 * sin, x32_2 * cos + x32_1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array
+           ) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, wi)
+    g = jnp.einsum("...d,df->...f", x, wg)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * h, wo)
+
+
+def normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def chunked_cross_entropy(features: jax.Array, head_fn,
+                          labels: jax.Array, mask: jax.Array,
+                          vocab_size: int, chunk: int = 4096) -> jax.Array:
+    """Masked CE without materializing full [T, V] logits (§Perf #3):
+    ``lax.scan`` over token chunks of the unembedding + loss.
+
+    features: [F, T, d]; head_fn(x [n, d]) -> logits [n, v]."""
+    f, t, d = features.shape
+    flat = features.reshape(f * t, d)
+    lab = labels.reshape(f * t)
+    msk = mask.reshape(f * t)
+    n = f * t
+    pad = (-n) % chunk
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        lab = jnp.pad(lab, (0, pad))
+        msk = jnp.pad(msk, (0, pad))
+    nc = (n + pad) // chunk
+
+    def step(acc, xs):
+        xc, lc, mc = xs
+        logits = head_fn(xc).astype(jnp.float32)
+        v_pad = logits.shape[-1]
+        if v_pad > vocab_size:
+            neg = jnp.full((v_pad - vocab_size,), -1e30, jnp.float32)
+            logits = logits + jnp.concatenate(
+                [jnp.zeros((vocab_size,), jnp.float32), neg])
+        lz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(lc, 0, vocab_size - 1)[:, None],
+            axis=-1)[:, 0]
+        return (acc[0] + jnp.sum((lz - gold) * mc),
+                acc[1] + jnp.sum(mc)), None
+
+    (num, den), _ = jax.lax.scan(
+        step, (jnp.zeros(()), jnp.zeros(())),
+        (flat.reshape(nc, chunk, d), lab.reshape(nc, chunk),
+         msk.reshape(nc, chunk)))
+    return num / jnp.maximum(den, 1.0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array, vocab_size: int) -> jax.Array:
+    """Masked token-mean cross entropy; logits may be vocab-padded (the
+    padding columns are excluded from the partition function)."""
+    v_pad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v_pad > vocab_size:
+        neg = jnp.full((v_pad - vocab_size,), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((vocab_size,), jnp.float32), neg])
+    lz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0, vocab_size - 1)[..., None],
+        axis=-1)[..., 0]
+    nll = (lz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts FFN with sort/scatter token dispatch (EP-ready).
+
+Top-k routing with per-frame capacity.  Dispatch is O(T·k) gather/scatter
+(not the O(T·E·C) one-hot einsum, which is infeasible at 64 experts and
+64K tokens/worker).  The expert dimension is sharded over the TP/EP axis
+(``model``) by the sharding rules; GSPMD turns the dispatch scatter into
+the EP all-to-all.  Experts are zero-padded to a multiple of the EP size
+(granite: 40→48) and the router masks padded experts to -inf, so padding
+is numerically invisible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+
+def padded_experts(cfg: ModelConfig, tp: int) -> int:
+    return ((cfg.n_experts + tp - 1) // tp) * tp
+
+
+def init_moe_ffn(cfg: ModelConfig, key: jax.Array, tp: int = 1):
+    ep = padded_experts(cfg, tp)
+    d, ff, nl = cfg.d_model, cfg.d_ff, cfg.n_layers
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.normal(ks[0], (nl, d, ep), d ** -0.5, jnp.float32),
+        "we_i": L.normal(ks[1], (nl, ep, d, ff), d ** -0.5, dt),
+        "we_g": L.normal(ks[2], (nl, ep, d, ff), d ** -0.5, dt),
+        "we_down": L.normal(ks[3], (nl, ep, ff, d), ff ** -0.5, dt),
+    }
+
+
+def _moe_frame(x: jax.Array, lp: dict, cfg: ModelConfig) -> jax.Array:
+    """x: [T, d] one frame's tokens. Returns [T, d]."""
+    t, d = x.shape
+    ep = lp["router"].shape[-1]
+    e_true, k = cfg.n_experts, cfg.experts_per_token
+    cap = int(-(-t * k // e_true) * cfg.capacity_factor)
+    cap = max(4, min(cap, t))
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), lp["router"])
+    if ep > e_true:
+        pad_mask = jnp.arange(ep) >= e_true
+        logits = jnp.where(pad_mask[None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, eidx = jax.lax.top_k(probs, k)                       # [T, k]
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = order // k
+    starts = jnp.searchsorted(e_sorted, jnp.arange(ep), side="left")
+    pos_in_e = jnp.arange(t * k) - starts[e_sorted]
+    keep = pos_in_e < cap                                   # capacity drop
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, ep * cap)
+
+    buf = jnp.zeros((ep * cap, d), x.dtype)
+    buf = buf.at[slot].set(x[tok_sorted], mode="drop")
+    buf = buf.reshape(ep, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, lp["we_i"])
+    g = jnp.einsum("ecd,edf->ecf", buf, lp["we_g"])
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, lp["we_down"])
+    out_flat = out.reshape(ep * cap, d)
+
+    fetched = jnp.take(out_flat, jnp.minimum(slot, ep * cap - 1), axis=0)
+    fetched = jnp.where(keep[:, None], fetched, 0.0)
+    y_sorted = jnp.zeros((t * k, d), x.dtype).at[order].set(fetched)
+    y = y_sorted.reshape(t, k, d)
+    return jnp.einsum("tkd,tk->td", y, w.astype(x.dtype))
+
+
+def moe_ffn(x: jax.Array, lp: dict, cfg: ModelConfig) -> jax.Array:
+    """x: [F, T, d] -> [F, T, d]. Routing/capacity is per frame, so each CP
+    worker dispatches its own tokens (ByteScale-style HDP composability)."""
+    return jax.vmap(lambda xi: _moe_frame(xi, lp, cfg))(x)
+
+
+def router_load(x: jax.Array, lp: dict, cfg: ModelConfig) -> jax.Array:
+    """Tokens routed per expert (diagnostics / load-balance tests)."""
+    logits = jnp.einsum("ftd,de->fte", x.astype(jnp.float32), lp["router"])
+    eidx = jax.lax.top_k(logits, cfg.experts_per_token)[1]
+    return jnp.sum(jax.nn.one_hot(eidx, lp["router"].shape[-1]),
+                   axis=(0, 1, 2))

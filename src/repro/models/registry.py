@@ -1,0 +1,211 @@
+"""Model registry: one uniform interface over all assigned architectures.
+
+``Model(cfg, tp)`` dispatches on ``cfg.family``:
+
+* dense / moe / audio / vlm → ``transformer.py`` (MoE FFN via config)
+* ssm                       → pure Mamba2 stack (this module)
+* hybrid                    → ``hybrid.py`` (zamba2)
+
+The interface is: ``init``, ``forward`` (packed-stream train/prefill with
+pluggable ``attn_fn``), ``init_cache`` + ``decode_step`` (pluggable cache
+attention/update), and ``loss`` (masked CE over true vocab).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import hybrid, layers, ssm, transformer
+
+
+# --------------------------------------------------------------------------
+# pure-SSM model (mamba2-130m)
+# --------------------------------------------------------------------------
+
+def _init_ssm_model(cfg: ModelConfig, key: jax.Array, tp: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    vpad = cfg.padded_vocab(tp)
+    # tied embeddings are also the unembedding: scale d^-1/2 keeps
+    # initial logits O(1)
+    emb_scale = cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+    params = {
+        "embed": layers.normal(ks[0], (vpad, cfg.d_model), emb_scale, dt),
+        "mamba": ssm.init_mamba_layers(cfg, ks[1], cfg.n_layers, tp),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.normal(
+            ks[2], (cfg.d_model, vpad), cfg.d_model ** -0.5, dt)
+    return params
+
+
+def _forward_ssm(params, cfg: ModelConfig, batch, attn_fn=None,
+                 remat=False, return_features: bool = False):
+    f, t = batch["tokens"].shape
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    pos_flat = batch["positions"].reshape(f * t)
+
+    def one(x, lp):
+        xs = ssm.mamba_block(x, lp, cfg, pos_flat)
+        return xs, None
+    one = transformer.apply_remat(one, remat)
+    xs, _ = jax.lax.scan(one, x.reshape(f * t, cfg.d_model),
+                         params["mamba"])
+    if return_features:
+        return xs.reshape(f, t, -1)
+    xs = layers.rms_norm(xs, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("sd,vd->sv", xs, params["embed"])
+    else:
+        logits = jnp.einsum("sd,dv->sv", xs, params["lm_head"])
+    return logits.reshape(f, t, -1)
+
+
+def _decode_ssm(params, cfg: ModelConfig, tokens, pos, cache,
+                decode_attn_fn=None, cache_update_fn=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def scan_fn(x, xs):
+        lp, st, cv = xs
+        x, st, cv = ssm.mamba_decode_step(x, lp, st, cv, cfg)
+        return x, (st, cv)
+
+    x, (sts, cvs) = jax.lax.scan(
+        scan_fn, x, (params["mamba"], cache["state"], cache["conv"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bd,vd->bv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+    return logits, {"state": sts, "conv": cvs}
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    tp: int = 1
+
+    def init(self, key: jax.Array):
+        if self.cfg.family == "ssm":
+            return _init_ssm_model(self.cfg, key, self.tp)
+        if self.cfg.family == "hybrid":
+            return hybrid.init_params(self.cfg, key, self.tp)
+        return transformer.init_params(self.cfg, key, self.tp)
+
+    def forward(self, params, batch: dict, attn_fn: Callable | None = None,
+                remat: bool = False) -> jax.Array:
+        if self.cfg.family == "ssm":
+            return _forward_ssm(params, self.cfg, batch, remat=remat)
+        if self.cfg.family == "hybrid":
+            return hybrid.forward(params, self.cfg, batch, attn_fn, remat)
+        return transformer.forward(params, self.cfg, batch, attn_fn, remat)
+
+    def init_cache(self, batch: int, seq_len: int):
+        if self.cfg.family == "ssm":
+            return ssm.init_ssm_cache(self.cfg, self.cfg.n_layers, batch,
+                                      self.tp)
+        if self.cfg.family == "hybrid":
+            return hybrid.init_cache(self.cfg, batch, seq_len, self.tp)
+        return transformer.init_kv_cache(self.cfg, batch, seq_len, self.tp)
+
+    def decode_step(self, params, tokens, pos, cache,
+                    decode_attn_fn=None, cache_update_fn=None):
+        if self.cfg.family == "ssm":
+            return _decode_ssm(params, self.cfg, tokens, pos, cache)
+        if self.cfg.family == "hybrid":
+            return hybrid.decode_step(params, self.cfg, tokens, pos, cache,
+                                      decode_attn_fn, cache_update_fn)
+        return transformer.decode_step(params, self.cfg, tokens, pos, cache,
+                                       decode_attn_fn, cache_update_fn)
+
+    def features(self, params, batch: dict, attn_fn=None, remat=False):
+        """Pre-unembed hidden states (chunked-loss path)."""
+        if self.cfg.family == "ssm":
+            return _forward_ssm(params, self.cfg, batch, remat=remat,
+                                return_features=True)
+        if self.cfg.family == "hybrid":
+            return hybrid.forward(params, self.cfg, batch, attn_fn, remat,
+                                  return_features=True)
+        return transformer.forward(params, self.cfg, batch, attn_fn, remat,
+                                   return_features=True)
+
+    def head_fn(self, params):
+        """Chunk-applicable unembedding (norm + lm head)."""
+        cfg = self.cfg
+
+        def head(x):
+            x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+            if cfg.tie_embeddings:
+                return jnp.einsum("...d,vd->...v", x, params["embed"])
+            return jnp.einsum("...d,dv->...v", x, params["lm_head"])
+        return head
+
+    def loss(self, params, batch: dict, attn_fn=None, remat=False,
+             chunked: bool = False, chunk: int = 4096) -> jax.Array:
+        if chunked:
+            feats = self.features(params, batch, attn_fn, remat)
+            return layers.chunked_cross_entropy(
+                feats, self.head_fn(params), batch["labels"],
+                batch["loss_mask"], self.cfg.vocab_size, chunk)
+        logits = self.forward(params, batch, attn_fn, remat)
+        return layers.cross_entropy(logits, batch["labels"],
+                                    batch["loss_mask"],
+                                    self.cfg.vocab_size)
+
+    def param_count(self, params) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def dense_attn_fn(seg: jax.Array, pos: jax.Array, causal: bool = True,
+                  chunk: int = 512):
+    """Single-device oracle attention over the packed stream (smoke tests
+    and the quickstart example): reshapes frames to the stream and runs
+    chunked masked attention."""
+    from ..kernels import ref
+
+    def attn(q, k, v):
+        f, t, h, d = q.shape
+        kh = k.shape[2]
+        qq = q.reshape(f * t, h, d).transpose(1, 0, 2)
+        kk = k.reshape(f * t, kh, d).transpose(1, 0, 2)
+        vv = v.reshape(f * t, kh, d).transpose(1, 0, 2)
+        s_flat = seg.reshape(f * t)
+        p_flat = pos.reshape(f * t)
+        o, _ = ref.chunked_attention(qq, kk, vv, s_flat, p_flat, s_flat,
+                                     p_flat, causal, chunk=chunk)
+        return o.transpose(1, 0, 2).reshape(f, t, h, d)
+
+    return attn
+
+
+def dense_cache_update(cache: jax.Array, new: jax.Array, pos: jax.Array
+                       ) -> jax.Array:
+    """cache: [B, S, KH, D]; new: [B, KH, D]; pos: [B]."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), pos].set(new.astype(cache.dtype))
+
+
+def dense_decode_attn(q, kc, vc, lengths):
+    """Oracle decode attention (single device)."""
+    from ..kernels import ref
+    pos = jnp.arange(kc.shape[1], dtype=jnp.int32)
+
+    def one(qb, kb, vb, ln):
+        seg_k = jnp.where(pos < ln, 0, -1).astype(jnp.int32)
+        o, _ = ref.reference_attention(
+            qb[:, None], kb.transpose(1, 0, 2), vb.transpose(1, 0, 2),
+            jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+            seg_k, pos, causal=False)
+        return o[:, 0]
+
+    return jax.vmap(one)(q, kc, vc, lengths)

@@ -1,0 +1,221 @@
+"""Mamba2 / SSD (state-space duality) blocks (arXiv:2405.21060).
+
+Chunked SSD over the packed stream with *segment resets*: the per-token
+log-decay is forced to -40 (e^-40 ~ 0) wherever ``position == 0`` (a new
+document begins), so the recurrence never crosses document — or pod —
+boundaries even though the whole global stream is scanned as one array.
+Intra-chunk terms use within-chunk cumsums (numerically safe), and the
+inter-chunk recurrence is a ``lax.associative_scan`` over chunk states,
+which GSPMD parallelizes across the sharded chunk dimension.
+
+FCP applicability note (DESIGN.md §Arch-applicability): attention-free —
+FCP's arbitrary block placement would break the sequential state
+recurrence, so SSM layers use standard DP/TP sharding; FCP still applies
+to the *shared attention* layers of hybrid models (zamba2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+RESET_LOG_DECAY = -40.0
+
+
+def ssm_dims(cfg: ModelConfig, tp: int = 1):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    nheads_pad = ((nheads + tp - 1) // tp) * tp
+    return d_inner, nheads, nheads_pad, nheads_pad * cfg.ssm_head_dim
+
+
+def init_mamba_layers(cfg: ModelConfig, key: jax.Array, n_layers: int,
+                      tp: int = 1):
+    _, _, nh, din = ssm_dims(cfg, tp)
+    d, ds, cw = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_ch = din + 2 * ds
+    ks = jax.random.split(key, 8)
+    proj_out = 2 * din + 2 * ds + nh
+    return {
+        "ln": jnp.ones((n_layers, d), dt),
+        "in_proj": L.normal(ks[0], (n_layers, d, proj_out), d ** -0.5, dt),
+        "conv_w": L.normal(ks[1], (n_layers, cw, conv_ch), 0.2, dt),
+        "conv_b": jnp.zeros((n_layers, conv_ch), dt),
+        "A_log": jnp.tile(jnp.log(jnp.linspace(1.0, 16.0, nh,
+                                               dtype=jnp.float32)),
+                          (n_layers, 1)),
+        "D": jnp.ones((n_layers, nh), jnp.float32),
+        "dt_bias": jnp.zeros((n_layers, nh), jnp.float32),
+        "ssm_norm": jnp.ones((n_layers, din), dt),
+        "out_proj": L.normal(ks[2], (n_layers, din, d), din ** -0.5, dt),
+    }
+
+
+def _masked_causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                        same_doc: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the stream, masked at doc boundaries.
+
+    x: [S, C]; w: [cw, C]; same_doc: [S, cw] (same_doc[t, i] == True iff
+    token t-i belongs to token t's document)."""
+    cw = w.shape[0]
+    out = x * w[0]
+    for i in range(1, cw):
+        shifted = jnp.pad(x[:-i], ((i, 0), (0, 0)))
+        out = out + jnp.where(same_doc[:, i:i + 1], shifted, 0.0) * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """L[..., t, s] = sum_{r=s+1..t} a[..., r] for t >= s else -inf."""
+    c = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_scan(xdt: jax.Array, a: jax.Array, B: jax.Array, C: jax.Array,
+             chunk: int):
+    """Chunked SSD.  xdt: [S, nh, hd] (inputs pre-scaled by dt);
+    a: [S, nh] log decay; B/C: [S, ds] (ngroups=1).  Returns y [S, nh, hd]
+    and final state [nh, hd, ds]."""
+    s, nh, hd = xdt.shape
+    ds = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        # zero inputs + reset decay: padding contributes nothing
+        xdt = jnp.pad(xdt, ((0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, pad), (0, 0)),
+                    constant_values=RESET_LOG_DECAY)
+        B = jnp.pad(B, ((0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    xz = xdt.reshape(nc, chunk, nh, hd)
+    az = a.reshape(nc, chunk, nh)
+    Bz = B.reshape(nc, chunk, ds)
+    Cz = C.reshape(nc, chunk, ds)
+
+    acum = jnp.cumsum(az, axis=1)                       # [z, c, nh]
+    # intra-chunk (the "quadratic attention-like" branch of SSD)
+    Lmat = jnp.exp(_segsum(az.transpose(0, 2, 1)))      # [z, nh, c, c]
+    G = jnp.einsum("ztd,zsd->zts", Cz, Bz)
+    y_diag = jnp.einsum("zts,znts,zsnh->ztnh", G, Lmat, xz)
+
+    # per-chunk output states
+    decay_out = jnp.exp(acum[:, -1:, :] - acum)         # [z, c, nh]
+    states = jnp.einsum("zcd,zcn,zcnh->znhd", Bz, decay_out, xz)
+
+    # inter-chunk recurrence (associative over chunks)
+    chunk_decay = acum[:, -1, :]                        # [z, nh]
+
+    def combine(l, r):
+        al, sl = l
+        ar, sr = r
+        return al + ar, sl * jnp.exp(ar)[..., None, None] + sr
+
+    dec_in, st_in = (chunk_decay, states.transpose(0, 1, 3, 2))
+    dec, st = jax.lax.associative_scan(combine, (dec_in, st_in), axis=0)
+    st = st.transpose(0, 1, 3, 2)                       # [z, nh, hd, ds]
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(st[:1]), st[:-1]], axis=0)      # state before chunk
+
+    y_off = jnp.einsum("zcd,zcn,znhd->zcnh", Cz, jnp.exp(acum), h_prev)
+    y = (y_diag + y_off).reshape(s_pad, nh, hd)[:s]
+    return y, st[-1]
+
+
+def mamba_block(x: jax.Array, lp: dict, cfg: ModelConfig,
+                positions: jax.Array, return_state: bool = False):
+    """One Mamba2 block over the packed stream.  x: [S, d].
+    With ``return_state``: (out, (final ssm state, conv tail)) for
+    prefill → decode handoff."""
+    s, d = x.shape
+    din = lp["ssm_norm"].shape[-1]
+    nh = lp["A_log"].shape[-1]
+    hd = din // nh
+    ds = cfg.ssm_state
+
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("sd,dp->sp", h, lp["in_proj"])
+    z, xbc, dtraw = jnp.split(zxbcdt, [din, 2 * din + 2 * ds], axis=-1)
+
+    # doc-boundary masks: token t-i is in t's document iff position >= i
+    cw = lp["conv_w"].shape[0]
+    doc_start = positions == 0
+    same_doc = positions[:, None] >= jnp.arange(cw)[None, :]
+
+    xbc_raw = xbc
+    xbc = _masked_causal_conv(xbc, lp["conv_w"], lp["conv_b"], same_doc)
+    xin, B, C = jnp.split(xbc, [din, din + ds], axis=-1)
+    xin = xin.reshape(s, nh, hd)
+
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + lp["dt_bias"])
+    a = -jnp.exp(lp["A_log"])[None] * dt                 # [S, nh] log decay
+    a = jnp.where(doc_start[:, None], RESET_LOG_DECAY, a)
+    xdt = (xin.astype(jnp.float32) * dt[..., None])
+
+    y, final_state = ssd_scan(xdt, a, B.astype(jnp.float32),
+                              C.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + lp["D"][None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(s, din).astype(x.dtype)
+    y = L.gated_rms_norm(y, z, lp["ssm_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("se,ed->sd", y, lp["out_proj"])
+    if return_state:
+        conv_tail = xbc_raw[-(cw - 1):] if cw > 1 else xbc_raw[:0]
+        return out, (final_state, conv_tail)
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode (recurrent step)
+# --------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, n_layers: int, batch: int, tp: int = 1):
+    _, _, nh, din = ssm_dims(cfg, tp)
+    ds, cw = cfg.ssm_state, cfg.ssm_conv
+    return {
+        "state": jnp.zeros((n_layers, batch, nh, din // nh, ds),
+                           jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cw - 1, din + 2 * ds),
+                          jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def mamba_decode_step(x: jax.Array, lp: dict, state: jax.Array,
+                      conv_state: jax.Array, cfg: ModelConfig):
+    """x: [B, d]; state: [B, nh, hd, ds]; conv_state: [B, cw-1, C].
+    Returns (y [B, d], state, conv_state)."""
+    b, d = x.shape
+    din = lp["ssm_norm"].shape[-1]
+    nh = lp["A_log"].shape[-1]
+    hd = din // nh
+    ds = cfg.ssm_state
+
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bd,dp->bp", h, lp["in_proj"])
+    z, xbc, dtraw = jnp.split(zxbcdt, [din, 2 * din + 2 * ds], axis=-1)
+
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [B,cw,C]
+    # window rows are oldest->newest; conv_w rows are lag 0..cw-1 -> flip
+    conv = jnp.einsum("bwc,wc->bc", window,
+                      jnp.flip(lp["conv_w"], axis=0)) + lp["conv_b"]
+    xbc = jax.nn.silu(conv)
+    new_conv_state = window[:, 1:]
+
+    xin, B, C = jnp.split(xbc, [din, din + ds], axis=-1)
+    xin = xin.reshape(b, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + lp["dt_bias"])
+    decay = jnp.exp(-jnp.exp(lp["A_log"])[None] * dt)     # [B, nh]
+    new_state = state * decay[..., None, None] + jnp.einsum(
+        "bnh,bd->bnhd", xin * dt[..., None], B.astype(jnp.float32))
+    y = jnp.einsum("bnhd,bd->bnh", new_state, C.astype(jnp.float32))
+    y = y + lp["D"][None, :, None] * xin
+    y = y.reshape(b, din).astype(x.dtype)
+    y = L.gated_rms_norm(y, z, lp["ssm_norm"], cfg.norm_eps)
+    return x + jnp.einsum("be,ed->bd", y, lp["out_proj"]), new_state, \
+        new_conv_state

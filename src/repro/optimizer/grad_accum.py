@@ -1,0 +1,25 @@
+"""Microbatch gradient accumulation (for batches beyond per-step memory)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate(loss_fn, params, microbatches):
+    """``microbatches``: pytree with a leading microbatch dim on every
+    leaf.  Returns (mean loss, mean grads) via ``lax.scan`` so memory is
+    one microbatch's activations."""
+
+    def step(carry, mb):
+        acc_loss, acc_g = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        acc_g = jax.tree.map(jnp.add, acc_g, g)
+        return (acc_loss + loss, acc_g), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    n = jax.tree.leaves(microbatches)[0].shape[0]
+    (loss, grads), _ = jax.lax.scan(step, (jnp.zeros(()), zeros),
+                                    microbatches)
+    inv = 1.0 / n
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)

@@ -1,0 +1,107 @@
+"""Logical sharding rules → NamedSharding (MaxText-style, name-driven).
+
+Axes (DESIGN.md §5):
+* ``pod``   — pure data parallel (gradient all-reduce over DCN),
+* ``data``  — FCP context parallel for activations; **FSDP** for weights
+  and optimizer state in train mode,
+* ``model`` — tensor parallel (heads / ffn / vocab) and expert parallel.
+
+Rules key on the leaf's name (last path component) and whether it lives
+under a stacked-layer subtree (leading layer dim).  ``mode="serve"``
+replicates weights over ``data`` (no FSDP all-gather per decode step).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# name -> spec WITHOUT the stacked layer dim; fsdp axis filled at use
+_RULES = {
+    # dense attention / shared attention
+    "wq": ("fsdp", "tp", None),
+    "wk": ("fsdp", "tp", None),
+    "wv": ("fsdp", "tp", None),
+    "bq": ("tp", None),
+    "bk": ("tp", None),
+    "bv": ("tp", None),
+    "wo": ("tp", None, "fsdp"),
+    # dense mlp
+    "wi": ("fsdp", "tp"),
+    "wg": ("fsdp", "tp"),
+    "wdown": ("tp", "fsdp"),
+    # moe
+    "router": ("fsdp", "tp"),
+    "we_i": ("tp", "fsdp", None),
+    "we_g": ("tp", "fsdp", None),
+    "we_down": ("tp", None, "fsdp"),
+    # mamba2
+    "in_proj": ("fsdp", "tp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "A_log": ("tp",),
+    "D": ("tp",),
+    "dt_bias": ("tp",),
+    "ssm_norm": ("tp",),
+    "out_proj": ("tp", "fsdp"),
+    # embeddings / head: vocab-parallel (Megatron-style).  Sharding d_model
+    # over fsdp here makes GSPMD all-reduce full [tokens, vocab] logits
+    # (measured: 1.6 GB/step on stablelm — see EXPERIMENTS.md §Perf #1);
+    # vocab-parallel costs one [tokens, d] all-reduce at embed instead.
+    "embed": ("tp", None),
+    "lm_head": (None, "tp"),
+    "frontend_proj": (None, None),
+    # norms
+    "ln": (None,), "ln1": (None,), "ln2": (None,),
+    "final_norm": (None,),
+}
+
+_STACKED_SUBTREES = ("layers", "mamba")
+
+
+def _leaf_spec(path, leaf, *, fsdp_axis, tp_axis) -> P:
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    name = names[-1]
+    if name not in _RULES:
+        return P()
+    rule = _RULES[name]
+    stacked = any(n in _STACKED_SUBTREES for n in names[:-1])
+    dims = list(rule)
+    if stacked:
+        dims = [None] + dims
+    # pad/trim against actual rank (e.g. optimizer scalars)
+    if len(dims) != leaf.ndim:
+        return P()
+    out = tuple(fsdp_axis if d == "fsdp" else tp_axis if d == "tp" else None
+                for d in dims)
+    return P(*out)
+
+
+def param_specs(params, *, mode: str = "train", fsdp: bool = True,
+                tp_axis: str = "model", fsdp_axis: str = "data"):
+    """PartitionSpec pytree for a parameter (or optimizer-state) tree."""
+    fa = fsdp_axis if (fsdp and mode == "train") else None
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _leaf_spec(p, x, fsdp_axis=fa, tp_axis=tp_axis), params)
+
+
+def param_shardings(params, mesh: Mesh, **kw):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, **kw))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    frame_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(frame_axes, None)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    spec = batch_spec(mesh)
+
+    def one(x):
+        if hasattr(x, "ndim") and x.ndim >= 2:
+            return NamedSharding(mesh, P(*(list(spec) + [None]
+                                           * (x.ndim - 2))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch)

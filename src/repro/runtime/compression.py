@@ -1,0 +1,44 @@
+"""Error-feedback gradient compression for the pod-axis (DCN) all-reduce.
+
+At 2+ pods the gradient all-reduce crosses the data-center network
+(~25 GB/s vs 4x50 GB/s ICI), so halving its bytes matters.  We compress
+f32 gradients to bf16 *with an error-feedback residual*: the quantization
+error of step t is added back into step t+1's gradient before
+quantization, so the bias does not accumulate (classic EF-SGD; drift is
+bounded instead of growing linearly).
+
+On this single-host container the quantize -> (all-)reduce -> dequantize
+path wraps the gradient tree itself — numerically identical to wrapping
+the DCN all-reduce, which is where ``launch/train.py`` applies it when a
+``pod`` axis exists.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, residuals):
+    """Returns (compressed bf16 grads ready for the cross-pod reduction,
+    new residuals)."""
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        gc = g32.astype(jnp.bfloat16)
+        return gc, g32 - gc.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree.unflatten(treedef, [o[0] for o in out])
+    res = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return comp, res
+
+
+def decompress_grads(comp):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), comp)

@@ -1,0 +1,52 @@
+"""Elastic scaling: re-plan FCP schedules and re-mesh when the healthy
+worker count changes.
+
+Model/optimizer state is worker-count independent (weights shard by
+NamedSharding over whatever mesh exists), so elasticity reduces to:
+
+1. rebuild the mesh over the surviving chips,
+2. re-run the block distributor + communication planner for the new CP
+   size (LPT is input-size agnostic),
+3. rebuild the loader's frame geometry (frames = CP size) and continue
+   from the last committed checkpoint.
+
+``replan`` performs (2); the elastic restart example/test drives the full
+(1)-(3) loop, shrinking 4 -> 2 workers mid-run and growing back.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..core.schedule import Schedule, make_schedule
+
+
+def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
+           *, n_q_heads: int, n_kv_heads: int, head_dim: int,
+           causal: bool = True,
+           speeds: np.ndarray | None = None) -> Schedule:
+    """Rebuild the FCP schedule for a new worker count.
+
+    tokens_per_worker grows/shrinks to keep the global token budget; the
+    caller re-shards the batch into the new frame geometry."""
+    total = int(sum(seqlens))
+    tpw = -(-total // (new_n_workers * block_size)) * block_size
+    return make_schedule(seqlens, new_n_workers, tpw, block_size,
+                         n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
+                         head_dim=head_dim, causal=causal, speeds=speeds)
+
+
+def reshape_frames(arr: np.ndarray, new_n_workers: int) -> np.ndarray:
+    """[F, T, ...] -> [F', T', ...] for the new worker count (same global
+    token stream, possibly padded)."""
+    f, t = arr.shape[:2]
+    total = f * t
+    new_t = -(-total // new_n_workers)
+    pad = new_n_workers * new_t - total
+    flat = arr.reshape((total,) + arr.shape[2:])
+    if pad:
+        flat = np.concatenate(
+            [flat, np.zeros((pad,) + flat.shape[1:], flat.dtype)])
+    return flat.reshape((new_n_workers, new_t) + arr.shape[2:])

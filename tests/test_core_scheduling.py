@@ -1,0 +1,352 @@
+"""Unit + property tests for the FCP scheduling core (blocks, distributor,
+planner, schedule)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocks as blockslib
+from repro.core import cost_model as cm
+from repro.core import distributor as dist
+from repro.core import planner as plannerlib
+from repro.core import policies
+from repro.core.blocks import PAD_SEGMENT
+from repro.core.schedule import make_schedule
+
+
+# --------------------------------------------------------------------------
+# sharding policy G
+# --------------------------------------------------------------------------
+
+def test_shard_stream_coverage():
+    seqlens = [100, 5000, 1024, 3]
+    b = blockslib.shard_stream(seqlens, 1024)
+    assert b.n_tokens % 1024 == 0
+    # every token of every doc appears exactly once
+    got = {s: 0 for s in range(len(seqlens))}
+    for blk in b.blocks:
+        for seg in blk.segments:
+            if seg.seq_id != PAD_SEGMENT:
+                got[seg.seq_id] += seg.length
+    assert got == {i: L for i, L in enumerate(seqlens)}
+    # blocks are exactly block_size incl. padding
+    for blk in b.blocks:
+        assert sum(s.length for s in blk.segments) == 1024
+
+
+def test_short_sequences_pack_into_shared_blocks():
+    """Paper §4.1: short sequences are packed, not over-sharded."""
+    b = blockslib.shard_stream([100, 200, 300, 424], 1024)
+    assert b.n_blocks == 1
+    assert len([s for s in b.blocks[0].segments if s.seq_id >= 0]) == 4
+
+
+def test_kv_dependencies_causal():
+    b = blockslib.shard_stream([4096], 1024)   # 4 blocks, one doc
+    deps = blockslib.kv_dependencies(b, causal=True)
+    assert deps == [[0], [0, 1], [0, 1, 2], [0, 1, 2, 3]]
+    deps_nc = blockslib.kv_dependencies(b, causal=False)
+    assert all(d == [0, 1, 2, 3] for d in deps_nc)
+
+
+def test_kv_dependencies_no_cross_document_leak():
+    b = blockslib.shard_stream([2048, 2048], 1024)
+    deps = blockslib.kv_dependencies(b, causal=True)
+    # block 2 (doc 1 start) must not depend on doc 0's blocks
+    assert deps[2] == [2]
+    assert deps[3] == [2, 3]
+
+
+def test_zigzag_order_balance():
+    owner = blockslib.zigzag_order(16, 4)
+    counts = np.bincount(owner, minlength=4)
+    assert (counts == 4).all()
+    # zig-zag pairing: i and 2N-1-i share a worker
+    assert owner[0] == owner[7] and owner[3] == owner[4]
+
+
+# --------------------------------------------------------------------------
+# exact pair counting
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 60), st.integers(1, 60), st.integers(0, 40),
+       st.integers(0, 40))
+@settings(max_examples=200, deadline=None)
+def test_causal_pairs_matches_bruteforce(la, lb, a0, b0):
+    a1, b1 = a0 + la, b0 + lb
+    brute = sum(1 for p in range(a0, a1) for q in range(b0, b1) if q <= p)
+    assert cm._causal_pairs(a0, a1, b0, b1) == brute
+
+
+@given(st.lists(st.integers(1, 3000), min_size=1, max_size=6),
+       st.sampled_from([256, 512, 1024]), st.booleans())
+@settings(max_examples=50, deadline=None)
+def test_pair_counts_sum_to_mask_total(seqlens, bs, causal):
+    """Sum of per-(q,kv)-block valid pairs == total mask area."""
+    b = blockslib.shard_stream(seqlens, bs)
+    deps = blockslib.kv_dependencies(b, causal)
+    got = sum(cm.pair_valid_tokens(b.blocks[i], b.blocks[j], causal)
+              for i, dep in enumerate(deps) for j in dep)
+    want = sum(L * (L + 1) // 2 if causal else L * L for L in seqlens)
+    assert got == want
+
+
+# --------------------------------------------------------------------------
+# distributor (Algorithm 1)
+# --------------------------------------------------------------------------
+
+def test_lpt_respects_memory_cap():
+    rng = np.random.default_rng(0)
+    compute = rng.uniform(1, 100, size=64)
+    memory = np.full(64, 1.0)
+    r = dist.assign_blocks(compute, memory, 8, mem_limit=8.0, delta=0.0)
+    assert not r.relaxed
+    assert (np.bincount(r.owner, minlength=8) == 8).all()
+
+
+def test_lpt_near_optimal_balance():
+    """LPT guarantees max load <= (4/3) OPT for identical machines."""
+    rng = np.random.default_rng(1)
+    compute = rng.uniform(1, 100, size=200)
+    memory = np.zeros(200)
+    r = dist.assign_blocks(compute, memory, 10, mem_limit=1e18)
+    opt_lb = compute.sum() / 10          # lower bound on OPT
+    assert r.worker_comp.max() <= (4 / 3) * max(opt_lb, compute.max()) + 1e-9
+
+
+def test_lpt_speed_awareness():
+    """Slow workers receive proportionally less compute."""
+    compute = np.full(100, 1.0)
+    memory = np.zeros(100)
+    speeds = np.array([1.0, 1.0, 1.0, 0.5])
+    r = dist.assign_blocks(compute, memory, 4, mem_limit=1e18, speeds=speeds)
+    raw = np.bincount(r.owner, weights=compute, minlength=4)
+    assert raw[3] < raw[0]               # straggler got less work
+    # normalized loads are balanced
+    norm = raw / speeds
+    assert norm.max() / norm.min() < 1.35
+
+
+@given(st.integers(2, 16), st.integers(10, 120), st.integers(2, 10))
+@settings(max_examples=40, deadline=None)
+def test_lpt_property_exact_fill(n_workers, seed, slots):
+    """With uniform memory and cap = slots, every worker gets exactly
+    ``slots`` blocks (the executor's static-shape invariant)."""
+    rng = np.random.default_rng(seed)
+    k = n_workers * slots
+    compute = rng.uniform(0, 50, size=k)
+    memory = np.full(k, 1.0)
+    r = dist.assign_blocks(compute, memory, n_workers,
+                           mem_limit=float(slots), delta=0.0)
+    assert (np.bincount(r.owner, minlength=n_workers) == slots).all()
+
+
+# --------------------------------------------------------------------------
+# planner: matching decomposition (Lemmas 1 & 2)
+# --------------------------------------------------------------------------
+
+@given(st.integers(2, 12), st.integers(0, 120), st.integers(0, 10 ** 6))
+@settings(max_examples=60, deadline=None)
+def test_matching_decomposition_property(n, n_edges, seed):
+    rng = np.random.default_rng(seed)
+    edges = []
+    for e in range(n_edges):
+        s, d = rng.integers(0, n, size=2)
+        edges.append((int(s), int(d), e))
+    ms = plannerlib.decompose_matchings(edges, n)
+    plannerlib.verify_matchings(ms, edges, n)   # matching-ness + coverage
+    # optimality: #rounds == max degree (Lemma 2)
+    out = np.zeros(n, dtype=int)
+    ind = np.zeros(n, dtype=int)
+    for s, d, _ in edges:
+        out[s] += 1
+        ind[d] += 1
+    assert len(ms) == max(out.max(initial=0), ind.max(initial=0))
+
+
+def test_decompose_empty():
+    assert plannerlib.decompose_matchings([], 4) == []
+
+
+def test_coalescer_groups():
+    edges = [(i % 4, (i + 1) % 4, i) for i in range(16)]
+    ms = plannerlib.decompose_matchings(edges, 4)
+    rounds = plannerlib.coalesce_matchings(ms, 2)
+    assert sum(len(r) for r in rounds) == len(ms)
+    for r in rounds:
+        assert len(r) <= 2
+        # per coalesced round each worker sends/recvs <= degree blocks
+        sends = [e[0] for m in r for e in m]
+        assert max(np.bincount(sends, minlength=4)) <= 2
+
+
+# --------------------------------------------------------------------------
+# full schedule invariants
+# --------------------------------------------------------------------------
+
+def _check_schedule_invariants(sched, n_workers):
+    spec, arr = sched.spec, sched.arrays
+    # every worker holds exactly `slots` blocks
+    counts = np.bincount(sched.assignment, minlength=n_workers)
+    assert (counts == spec.slots).all()
+    # every remote dependency arrives before (or at round) its compute step
+    arrival = {}
+    for r, m in enumerate(sched.comm_matchings):
+        for s, d, j in m:
+            arrival[(d, j)] = r
+    for w in range(n_workers):
+        for t in range(spec.n_steps):
+            q = arr.step_q[w, t]
+            if q == spec.q_trash:
+                continue
+            kv = arr.step_kv[w, t]
+            if kv >= spec.slots and kv < spec.kv_trash:
+                # received block: some arrival must map to this ext slot at
+                # a round < t with no interposing overwrite before t
+                ok = False
+                for (ww, j), r in arrival.items():
+                    if ww != w or r >= t:
+                        continue
+                    if arr.recv_slot[w, r] != kv:
+                        continue
+                    # not overwritten in (r, t)
+                    clobbered = any(
+                        arr.recv_slot[w, r2] == kv
+                        for r2 in range(r + 1, min(t, spec.n_rounds)))
+                    if not clobbered:
+                        ok = True
+                if not ok:
+                    raise AssertionError(f"worker {w} step {t}: stale slot")
+    # all pairs are scheduled exactly once
+    n_sched = int(np.sum(arr.step_q != spec.q_trash))
+    assert n_sched == int(sched.pairs_per_worker.sum())
+
+
+@pytest.mark.parametrize("seqlens", [
+    [4096] * 8,                          # uniform, block-aligned
+    [16384, 512, 512, 300, 15000],       # long-tailed
+    [100] * 50,                          # all-short (packing)
+    [32768],                             # single long doc
+])
+def test_schedule_invariants(seqlens):
+    total = sum(seqlens)
+    n_workers = 4
+    tpw = ((total + n_workers * 1024 - 1) // (n_workers * 1024)) * 1024
+    sched = make_schedule(seqlens, n_workers, tpw, 1024,
+                          n_q_heads=4, n_kv_heads=2, head_dim=64)
+    _check_schedule_invariants(sched, n_workers)
+
+
+@given(st.lists(st.integers(50, 9000), min_size=1, max_size=12),
+       st.sampled_from([2, 4, 8]), st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_schedule_property(seqlens, n_workers, causal):
+    total = sum(seqlens)
+    tpw = max(1024, ((total + n_workers * 1024 - 1)
+                     // (n_workers * 1024)) * 1024)
+    sched = make_schedule(seqlens, n_workers, tpw, 1024, causal=causal,
+                          n_q_heads=2, n_kv_heads=2, head_dim=32)
+    _check_schedule_invariants(sched, n_workers)
+    plannerlib.verify_matchings(sched.comm_matchings, sched.comm_edges,
+                                n_workers)
+
+
+# --------------------------------------------------------------------------
+# baseline policies produce valid, comparable schedules
+# --------------------------------------------------------------------------
+
+def test_policies_comparable_imbalance():
+    """FCP's compute imbalance beats ring and bytescale on a long-tailed
+    batch (paper Fig. 9 directionally)."""
+    rng = np.random.default_rng(7)
+    seqlens = np.clip(rng.lognormal(8.5, 1.2, size=40).astype(int),
+                      128, 65536).tolist()
+    n_workers, bs = 16, 1024
+    total = sum(seqlens)
+    tpw = ((total + n_workers * bs - 1) // (n_workers * bs)) * bs
+    batch = blockslib.shard_stream(seqlens, bs, n_workers * tpw)
+    deps = blockslib.kv_dependencies(batch, True)
+
+    a_fcp = policies.assign_fcp(batch, deps, n_workers, 8, 128,
+                                locality=False)
+    a_ring = policies.assign_ring(batch, n_workers)
+    a_bsc = policies.assign_bytescale(batch, n_workers, tpw)
+
+    def imb(a):
+        r = cm.simulate_attention_module(batch, a, deps, n_workers,
+                                         cm.TPU_V5E, 8, 8, 128)
+        return r.compute_imbalance
+
+    assert imb(a_fcp) < 0.06                     # paper: <5%
+    assert imb(a_fcp) <= imb(a_ring) + 1e-9
+    assert imb(a_fcp) <= imb(a_bsc) + 1e-9
+
+
+def test_wlb_oracle_picks_better():
+    rng = np.random.default_rng(3)
+    seqlens = np.clip(rng.lognormal(8.0, 1.0, size=30).astype(int),
+                      128, 32768).tolist()
+    n_workers, bs = 8, 1024
+    total = sum(seqlens)
+    tpw = ((total + n_workers * bs - 1) // (n_workers * bs)) * bs
+    batch = blockslib.shard_stream(seqlens, bs, n_workers * tpw)
+    deps = blockslib.kv_dependencies(batch, True)
+    a = policies.assign_wlb(batch, deps, n_workers, tpw, cm.TPU_V5E,
+                            8, 8, 128)
+    t_wlb = cm.simulate_attention_module(batch, a, deps, n_workers,
+                                         cm.TPU_V5E, 8, 8, 128).time
+    for other in (policies.assign_ring(batch, n_workers),
+                  policies.assign_bytescale(batch, n_workers, tpw)):
+        t = cm.simulate_attention_module(batch, other, deps, n_workers,
+                                         cm.TPU_V5E, 8, 8, 128).time
+        assert t_wlb <= t + 1e-12
+
+
+# --------------------------------------------------------------------------
+# beyond-paper optimizations (§Perf)
+# --------------------------------------------------------------------------
+
+def test_locality_refinement_identity_on_uniform():
+    """Uniform workloads must stay in place: (near-)zero reshuffle."""
+    from repro.core.schedule import make_schedule
+    sched = make_schedule([4096] * 16, 4, 16384, 4096,
+                          n_q_heads=8, n_kv_heads=8, head_dim=128)
+    moved = int(np.sum(sched.stream_owner != sched.assignment))
+    assert moved <= 2            # odd swap cycles may leave stragglers
+
+
+@given(st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_locality_refinement_preserves_balance(seed):
+    """Refinement drifts per-worker load by at most tol while reducing
+    movement."""
+    rng = np.random.default_rng(seed)
+    seqs = np.clip(rng.lognormal(8.0, 1.1, 24).astype(int),
+                   128, 30000).tolist()
+    n, bs = 8, 1024
+    total = sum(seqs)
+    tpw = -(-total // (n * bs)) * bs
+    from repro.core.schedule import make_schedule
+    s_loc = make_schedule(seqs, n, tpw, bs, n_q_heads=8, n_kv_heads=8,
+                          head_dim=128, locality=True)
+    s_no = make_schedule(seqs, n, tpw, bs, n_q_heads=8, n_kv_heads=8,
+                         head_dim=128, locality=False)
+    costs = cm.block_q_flops(s_no.batch, s_no.deps, 8, 128)
+    tol = 0.05 * costs.sum() / n
+    l_loc = np.bincount(s_loc.assignment, weights=costs, minlength=n)
+    l_no = np.bincount(s_no.assignment, weights=costs, minlength=n)
+    assert l_loc.max() <= l_no.max() + tol + 1e-6
+    moved_loc = int(np.sum(s_loc.stream_owner != s_loc.assignment))
+    moved_no = int(np.sum(s_no.stream_owner != s_no.assignment))
+    assert moved_loc <= moved_no
+
+
+def test_vectorized_block_costs_match_pairwise():
+    rng = np.random.default_rng(3)
+    for causal in (True, False):
+        seqs = np.clip(rng.lognormal(7, 1, 10).astype(int), 50, 8000)
+        b = blockslib.shard_stream(seqs.tolist(), 512)
+        deps = blockslib.kv_dependencies(b, causal)
+        fast = cm.block_q_flops(b, deps, 4, 64, causal)
+        slow = cm.block_q_flops_pairwise(b, deps, 4, 64, causal)
+        np.testing.assert_allclose(fast, slow)
