@@ -162,6 +162,49 @@ def fig3_kernel_efficiency(rows: list[str]) -> None:
                 mfu=f"{eff:.3f}"))
 
 
+def coalescer_measured(rows: list[str]) -> None:
+    """§4.2 bottom-up coalescer on *real* schedules: measured KV rounds,
+    ppermute launches, and payload bytes per coalesce degree, next to the
+    per-message amortization the §3.3 model (SimFlags.coalesce) assumes.
+
+    ``launch_amort`` is Delta / launches (the real path's message-count
+    reduction); the analytic model divides its per-message overhead by C,
+    so comparing the two shows how much of the modeled amortization the
+    ppermute transport actually delivers on this batch shape.
+    """
+    from repro.data import distributions
+    n = 64
+    budget = n * common.TOKENS_PER_WORKER
+    kv_bytes = 2 * common.BLOCK * common.N_KV_HEADS * common.HEAD_DIM * 2
+    long = [budget // 4, budget // 8, budget // 16]
+    workloads = {
+        "spread": distributions.batch_compositions(
+            "real_world", budget, 1, seed=42)[0],
+        "paired": long + [8192] * ((budget - sum(long)) // 8192),
+    }
+    for tag, comp in workloads.items():
+        for C in (1, 4, 16):
+            sched = make_schedule(
+                comp, n, common.TOKENS_PER_WORKER, common.BLOCK,
+                n_q_heads=common.N_Q_HEADS, n_kv_heads=common.N_KV_HEADS,
+                head_dim=common.HEAD_DIM, coalesce=C)
+            spec = sched.spec
+            shipped = sum(len(g.perm) * g.rows
+                          for rr in spec.comm_rounds for g in rr.groups)
+            real = len(sched.comm_edges)
+            launches = max(spec.n_comm_launches, 1)
+            r = common.simulate(sched.batch, sched.assignment, sched.deps,
+                                n, flags=cm.SimFlags(coalesce=C))
+            rows.append(common.row(
+                f"coalescer_measured/{tag}/C{C}", r.time * 1e6,
+                delta=spec.n_matchings, rounds=spec.n_rounds,
+                launches=spec.n_comm_launches,
+                launch_amort=f"{spec.n_matchings / launches:.2f}",
+                model_amort=C,
+                wire_mb=f"{shipped * kv_bytes / 2**20:.1f}",
+                pad=f"{(shipped / max(real, 1) - 1) * 100:.0f}%"))
+
+
 def scheduler_latency(rows: list[str]) -> None:
     """§4.2 claim: planning completes 'within seconds at the scale of
     hundreds of workers'.  Real wall-clock of the full pipeline
@@ -175,15 +218,16 @@ def scheduler_latency(rows: list[str]) -> None:
         sched = make_schedule(comp, n, common.TOKENS_PER_WORKER,
                               common.BLOCK, n_q_heads=common.N_Q_HEADS,
                               n_kv_heads=common.N_KV_HEADS,
-                              head_dim=common.HEAD_DIM)
+                              head_dim=common.HEAD_DIM, coalesce=16)
         dt = time.time() - t0
         rows.append(common.row(
             f"scheduler_latency/N{n}", dt * 1e6,
             rounds=sched.spec.n_rounds, steps=sched.spec.n_steps,
+            launches=sched.spec.n_comm_launches,
             blocks=sched.batch.n_blocks))
 
 
 ALL = [fig3_kernel_efficiency, fig9_imbalance, fig10_compute_efficiency,
        fig11_weak_scaling, table2_ablation, fig12_block_size,
        fig13_per_worker_tokens, fig14_gpu_y, fig15_16_workloads,
-       scheduler_latency]
+       coalescer_measured, scheduler_latency]

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# CPU CI: tier-1 test suite minus the slow multi-device executor suite.
+# Mirrors .github/workflows/ci.yml so it can run locally or on any runner.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -e ".[dev]"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m "not slow"

@@ -1,0 +1,69 @@
+"""JAX version compatibility layer.
+
+The repo targets both the container's JAX 0.4.37 and current releases.
+Three APIs moved under our feet:
+
+* ``jax.shard_map`` — top-level export (with ``check_vma``) is recent;
+  0.4.x only has ``jax.experimental.shard_map.shard_map`` (``check_rep``).
+* ``jax.sharding.AxisType`` — the explicit-sharding axis-type enum does
+  not exist on 0.4.x.
+* ``jax.make_mesh(..., axis_types=...)`` — the kwarg is rejected on 0.4.x.
+
+``shard_map`` below is the function the repo's own code should call.
+``install()`` additionally backfills the missing attributes onto ``jax``
+itself (never overriding anything that exists) so that scripts/tests
+written against the modern API run unchanged on the old release.  It is
+invoked from ``repro/__init__``, i.e. importing anything under ``repro``
+is enough.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _legacy_shard_map():
+    from jax.experimental.shard_map import shard_map as sm
+
+    @functools.wraps(sm)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma, **kw)
+    return shard_map
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    shard_map = _legacy_shard_map()
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on old JAX (where every
+    mesh axis behaves like ``Auto``)."""
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _tolerant_make_mesh(real_make_mesh):
+    @functools.wraps(real_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *args, **kw):
+        kw.pop("axis_types", None)     # old JAX: all axes are Auto anyway
+        return real_make_mesh(axis_shapes, axis_names, *args, **kw)
+    return make_mesh
+
+
+def install() -> None:
+    """Backfill modern JAX surface onto an old release (idempotent;
+    existing attributes are never replaced)."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        jax.make_mesh = _tolerant_make_mesh(jax.make_mesh)

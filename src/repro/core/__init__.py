@@ -8,8 +8,9 @@ from .cost_model import (GPU_X, GPU_Y, HARDWARE, TPU_V5E, HardwareProfile,
 from .distributor import AssignmentResult, assign_blocks
 from .planner import (build_comm_edges, build_reshuffle_edges,
                       coalesce_matchings, decompose_matchings,
-                      verify_matchings)
-from .schedule import PlanArrays, Schedule, StaticSpec, make_schedule
+                      group_coalesced_round, verify_matchings)
+from .schedule import (CommGroup, CommRound, PlanArrays, Schedule,
+                       StaticSpec, make_schedule)
 
 __all__ = [
     "Block", "BlockedBatch", "Segment", "kv_dependencies", "shard_stream",
@@ -18,6 +19,6 @@ __all__ = [
     "simulate_attention_module", "total_attention_flops",
     "AssignmentResult", "assign_blocks", "build_comm_edges",
     "build_reshuffle_edges", "coalesce_matchings", "decompose_matchings",
-    "verify_matchings", "PlanArrays", "Schedule", "StaticSpec",
-    "make_schedule",
+    "group_coalesced_round", "verify_matchings", "CommGroup", "CommRound",
+    "PlanArrays", "Schedule", "StaticSpec", "make_schedule",
 ]

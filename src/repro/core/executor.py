@@ -5,11 +5,12 @@ Runs a host-built :class:`~repro.core.schedule.Schedule` inside
 
 * **transparent reshuffle** — ppermute matchings move (q, k, v) blocks
   from the user/stream layout to the schedule layout (and ``o`` back);
-* **block-level pipelined rounds** — per round ``t`` the kernel issues the
-  round's ``lax.ppermute`` (one matching == one partial permutation ==
-  congestion-free, Lemma 1) *before* the compute step that consumes the
-  previous arrival, so XLA's async collective scheduler overlaps them
-  (the paper's multi-buffer pipeline, §5);
+* **block-level pipelined rounds** — per coalesced round ``r`` the kernel
+  issues the round's ``lax.ppermute`` group(s) (each group a partial
+  permutation == congestion-free, Lemma 1, shipping a stack of up to ``C``
+  KV blocks — the §4.2 bottom-up coalescer) *before* the compute step that
+  consumes the previous arrival, so XLA's async collective scheduler
+  overlaps them (the paper's multi-buffer pipeline, §5);
 * **compute steps** — each step runs one (q-slot, kv-slot) partial
   attention (``kernels.ops.block_attention``) and merges it into the
   per-slot flash accumulator;
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..kernels import ops
 from ..kernels.ref import NEG_INF
 from .schedule import PlanArrays, Schedule, StaticSpec
@@ -102,17 +104,25 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
     qs = with_trash(_gather_rows(q_u, t["resh_local_src"]))
     ks = with_trash(_gather_rows(k_u, t["resh_local_src"]))
     vs = with_trash(_gather_rows(v_u, t["resh_local_src"]))
+    # senders gather through a trash row: idle lanes ship zeros
+    q_ut, k_ut, v_ut = with_trash(q_u), with_trash(k_u), with_trash(v_u)
     for r in range(spec.n_resh_rounds):
-        perm = list(spec.resh_perms[r])
-        payload = jnp.concatenate([
-            _dyn_row(q_u, t["resh_send_slot"][r]),
-            _dyn_row(k_u, t["resh_send_slot"][r]),
-            _dyn_row(v_u, t["resh_send_slot"][r])], axis=1)  # [1,hq+2kh,...]
-        recv = jax.lax.ppermute(payload, cp_axis, perm)
+        snd = t["resh_send_slot"][r]                 # [S2] payload rows
         dst = t["resh_dst_slot"][r]
-        qs = _set_row(qs, recv[:, :hq], dst)
-        ks = _set_row(ks, recv[:, hq:hq + kh], dst)
-        vs = _set_row(vs, recv[:, hq + kh:], dst)
+        off = 0
+        for g in spec.resh_rounds[r].groups:
+            # rows the worker does not participate in gather/write trash
+            idx = snd[off:off + g.rows]
+            payload = jnp.concatenate([
+                _gather_rows(q_ut, idx),
+                _gather_rows(k_ut, idx),
+                _gather_rows(v_ut, idx)], axis=1)   # [rows, hq+2kh, ...]
+            recv = jax.lax.ppermute(payload, cp_axis, list(g.perm))
+            for i in range(g.rows):
+                qs = _set_row(qs, recv[i:i + 1, :hq], dst[off + i])
+                ks = _set_row(ks, recv[i:i + 1, hq:hq + kh], dst[off + i])
+                vs = _set_row(vs, recv[i:i + 1, hq + kh:], dst[off + i])
+            off += g.rows
 
     # ---- extended KV buffer (local slots + colored receive slots + trash) -
     zpad = jnp.zeros((ext + 1, kh, bs, d), ks.dtype)
@@ -126,15 +136,22 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
 
     n_iter = max(spec.n_steps, spec.n_rounds)
     for step in range(n_iter):
-        recv = None
+        arrivals = []               # [(row offset, group, payload), ...]
         if step < spec.n_rounds:
-            # issue this round's matching ppermute first — independent of
-            # the compute below, so XLA overlaps them (block pipeline)
-            send = jnp.concatenate([_dyn_row(kxt, t["send_slot"][step]),
-                                    _dyn_row(vxt, t["send_slot"][step])],
-                                   axis=1)              # [1, 2kh, bs, d]
-            recv = jax.lax.ppermute(send, cp_axis,
-                                    list(spec.comm_perms[step]))
+            # issue this round's ppermute group(s) first — independent of
+            # the compute below, so XLA overlaps them (block pipeline).
+            # Each group ships a stack of up to C KV blocks (coalescer).
+            snd = t["send_slot"][step]                  # [S] payload rows
+            off = 0
+            for g in spec.comm_rounds[step].groups:
+                idx = snd[off:off + g.rows]
+                payload = jnp.concatenate(
+                    [_gather_rows(kxt, idx), _gather_rows(vxt, idx)],
+                    axis=1)                         # [rows, 2kh, bs, d]
+                arrivals.append(
+                    (off, g,
+                     jax.lax.ppermute(payload, cp_axis, list(g.perm))))
+                off += g.rows
         if step < spec.n_steps:
             qslot = t["step_q"][step]
             kvslot = t["step_kv"][step]
@@ -157,11 +174,14 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
             o_new, l_new = ops.merge_partials(o_old, l_old, o_p, lse_p)
             acc_o = _set_row(acc_o, o_new[None], qslot)
             acc_lse = _set_row(acc_lse, l_new[None], qslot)
-        if recv is not None:
-            # commit the arrival after compute: consumers run at step >= r+1
-            dst = t["recv_slot"][step]
-            kxt = _set_row(kxt, recv[:, :kh], dst)
-            vxt = _set_row(vxt, recv[:, kh:], dst)
+        if arrivals:
+            # commit the arrivals after compute: consumers run at step >=
+            # r+1 (round granularity — the §4.2 consumer constraint)
+            dst = t["recv_slot"][step]                  # [S] buffer slots
+            for off, g, recv in arrivals:
+                for i in range(g.rows):
+                    kxt = _set_row(kxt, recv[i:i + 1, :kh], dst[off + i])
+                    vxt = _set_row(vxt, recv[i:i + 1, kh:], dst[off + i])
 
     # ---- restore: schedule layout -> stream layout -------------------------
     if cfg.out_dtype is not None:
@@ -169,10 +189,17 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
         acc_o = acc_o.astype(jnp.dtype(cfg.out_dtype))
     o_u = with_trash(_gather_rows(acc_o[:slots + 1], t["restore_local_src"]))
     for r in range(spec.n_resh_rounds):
-        perm = [(dst, src) for src, dst in spec.resh_perms[r]]
-        send = _dyn_row(acc_o, t["restore_send_slot"][r])
-        recv = jax.lax.ppermute(send, cp_axis, perm)
-        o_u = _set_row(o_u, recv, t["restore_dst_slot"][r])
+        snd = t["restore_send_slot"][r]
+        dst = t["restore_dst_slot"][r]
+        off = 0
+        for g in spec.resh_rounds[r].groups:
+            # reversed partial permutation is a partial permutation
+            perm = [(d_, s_) for s_, d_ in g.perm]
+            payload = _gather_rows(acc_o, snd[off:off + g.rows])
+            recv = jax.lax.ppermute(payload, cp_axis, perm)
+            for i in range(g.rows):
+                o_u = _set_row(o_u, recv[i:i + 1], dst[off + i])
+            off += g.rows
     o = o_u[:slots].transpose(0, 2, 1, 3).reshape(tpw, hq, d)
     return o[None]
 
@@ -192,7 +219,7 @@ def fcp_attention(q, k, v, tables: dict[str, jax.Array], *,
     tspec = {k_: (P() if k_.startswith("blk_") else P(cp_axis))
              for k_ in tables}
     fn = functools.partial(_fcp_local, spec=spec, cp_axis=cp_axis, cfg=cfg)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(dspec, dspec, dspec, tspec),
         out_specs=dspec, check_vma=False)(q, k, v, tables)
@@ -277,7 +304,7 @@ def cp_cache_update(cache, new, pos, *, mesh: jax.sharding.Mesh,
 
     cspec = P(batch_axis, seq_axes, head_axis, None)
     nspec = P(batch_axis, head_axis, None)
-    return jax.shard_map(local, mesh=mesh,
+    return shard_map(local, mesh=mesh,
                          in_specs=(cspec, nspec, P(batch_axis)),
                          out_specs=cspec, check_vma=False)(cache, new, pos)
 
@@ -304,6 +331,6 @@ def cp_decode_attention(q, k_cache, v_cache, lengths, *,
     fn = functools.partial(_decode_local, seq_axes=seq_axes,
                            axis_sizes=axis_sizes, shard_len=shard_len,
                            cfg=cfg)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=(qspec, cspec, cspec, lspec),
         out_specs=qspec, check_vma=False)(q, k_cache, v_cache, lengths)

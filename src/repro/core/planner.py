@@ -170,6 +170,81 @@ def coalesce_matchings(matchings: Sequence[list[Edge]], degree: int
             for i in range(0, len(matchings), degree)]
 
 
+# wire-padding bound for group merging: a group may ship at most this
+# factor of its real payload (row height x pair count vs real blocks)
+COALESCE_PAD_CAP = 1.5
+
+CoalescedEdge = tuple[int, int, int, int, Any]  # (row, lane, src, dst, pay)
+
+
+def group_coalesced_round(window: Sequence[Sequence[Edge]],
+                          pad_cap: float = COALESCE_PAD_CAP
+                          ) -> list[tuple[tuple[tuple[int, int], ...], int,
+                                          list[CoalescedEdge]]]:
+    """Merge a coalesced round's edges into collective *groups* (§4.2).
+
+    A group is a set of whole (src, dst) *pairs* whose distinct pairs form
+    a partial permutation — the group ships as ONE ``lax.ppermute`` whose
+    payload stacks ``rows`` KV blocks, where ``rows`` is the largest
+    per-pair block count in the group.  Each sender packs its pair's
+    blocks into rows ``0..m-1`` (FIFO by sub-matching lane) and pads the
+    rest with trash, so a window's pulls that concentrate on few worker
+    pairs — long-document traffic — collapse from ``C`` collective
+    launches into one tall one: this is what amortizes per-message
+    latency.  Row packing makes the merge insensitive to *which* lanes a
+    pair occupies; padding only comes from height variance between a
+    group's pairs, and a merge is rejected when it would inflate the
+    group's wire payload (``rows x n_pairs``) beyond ``pad_cap`` times
+    its real block count.  Spread-out traffic (all multiplicities 1)
+    therefore degrades to height-1 groups with zero padding.
+
+    Pairs are placed heaviest-first so long runs seed the groups.
+    Returns ``[(perm, rows, edges), ...]`` with ``perm`` the merged
+    partial permutation (sorted distinct pairs) and ``edges`` the
+    ``(row, lane, src, dst, payload)`` records assigned to the group.
+    """
+    by_pair: dict[tuple[int, int], list[tuple[int, Any]]] = defaultdict(list)
+    for lane, m in enumerate(window):
+        for s, d, p in m:
+            by_pair[(int(s), int(d))].append((lane, p))
+
+    groups: list[dict] = []
+    for (s, d), occ in sorted(by_pair.items(),
+                              key=lambda kv: (-len(kv[1]), kv[0])):
+        m = len(occ)
+        placed = False
+        for g in groups:
+            if g["out"].get(s, d) != d or g["in"].get(d, s) != s:
+                continue
+            rows = max(g["rows"], m)
+            n_pairs = len(g["pairs"]) + 1
+            if rows * n_pairs > pad_cap * (g["real"] + m):
+                continue                            # padding guard
+            g["out"][s] = d
+            g["in"][d] = s
+            g["rows"] = rows
+            g["pairs"].add((s, d))
+            g["real"] += m
+            g["edges"].extend((row, lane, s, d, p)
+                              for row, (lane, p) in enumerate(occ))
+            placed = True
+            break
+        if not placed:
+            groups.append({"out": {s: d}, "in": {d: s},
+                           "rows": m, "pairs": {(s, d)}, "real": m,
+                           "edges": [(row, lane, s, d, p)
+                                     for row, (lane, p) in enumerate(occ)]})
+    if len(groups) > len(window):
+        # merging lost to the identity decomposition (very spread traffic
+        # plus unlucky first-fit coloring): one group per sub-matching is
+        # never worse than the uncoalesced schedule
+        return [(tuple(sorted((int(s), int(d)) for s, d, _ in m)), 1,
+                 [(0, lane, int(s), int(d), p) for s, d, p in m])
+                for lane, m in enumerate(window)]
+    return [(tuple(sorted(g["pairs"])), g["rows"], g["edges"])
+            for g in groups]
+
+
 # --------------------------------------------------------------------------
 # communication-edge construction
 # --------------------------------------------------------------------------
@@ -211,31 +286,33 @@ def build_reshuffle_edges(stream_owner: np.ndarray,
 
 @dataclasses.dataclass
 class SlotAllocation:
-    slot_of_arrival: dict[tuple[int, int], int]   # (worker, round) -> slot
+    slot_of_arrival: dict[tuple[int, Hashable], int]  # (worker, blk) -> slot
     n_slots: int                                   # buffer depth needed
 
 
 def allocate_recv_slots(
-        arrivals: dict[tuple[int, int], Hashable],     # (worker,round)->blk
+        arrivals: dict[tuple[int, int], Sequence[Hashable]],
         last_use: dict[tuple[int, Hashable], int],     # (worker,blk)->step
         n_rounds: int, n_workers: int) -> SlotAllocation:
     """Greedy interval coloring of received blocks into buffer slots.
 
-    A block arriving at round ``r`` is live until the compute step of its
-    last consumer; slots are reused afterwards.  Keeps the receive buffer
-    at max-concurrent-live depth instead of one-slot-per-round.
+    ``arrivals`` maps ``(worker, round)`` to the blocks delivered that
+    round — a coalesced round delivers up to ``C`` of them.  A block
+    arriving at round ``r`` is live until the compute step of its last
+    consumer; slots are reused afterwards.  Keeps the receive buffer at
+    max-concurrent-live depth instead of one-slot-per-arrival.
     """
-    slot_of: dict[tuple[int, int], int] = {}
+    slot_of: dict[tuple[int, Hashable], int] = {}
     n_slots = 0
     for w in range(n_workers):
         free: list[int] = []
         allocated = 0
         active: list[tuple[int, int]] = []   # (expiry step, slot)
         for r in range(n_rounds):
-            if (w, r) not in arrivals:
+            blks = arrivals.get((w, r), ())
+            if not blks:
                 continue
-            blk = arrivals[(w, r)]
-            # expire slots whose last use is before this arrival is usable
+            # expire slots whose last use is before this round commits
             still = []
             for exp, slot in active:
                 if exp <= r:                 # consumed strictly before now
@@ -243,13 +320,14 @@ def allocate_recv_slots(
                 else:
                     still.append((exp, slot))
             active = still
-            if free:
-                slot = free.pop()
-            else:
-                slot = allocated
-                allocated += 1
-            exp = last_use.get((w, blk), r + 1)
-            active.append((exp, slot))
-            slot_of[(w, r)] = slot
+            for blk in blks:
+                if free:
+                    slot = free.pop()
+                else:
+                    slot = allocated
+                    allocated += 1
+                exp = last_use.get((w, blk), r + 1)
+                active.append((exp, slot))
+                slot_of[(w, blk)] = slot
         n_slots = max(n_slots, allocated)
     return SlotAllocation(slot_of_arrival=slot_of, n_slots=n_slots)

@@ -13,7 +13,11 @@ coloring, and emits an :class:`ExecPlan`:
   token metadata).  Per-batch variation lives here without recompiling.
 
 The executor (``core/executor.py``) interprets the plan inside
-``shard_map`` with one ``lax.ppermute`` per matching.
+``shard_map``.  Matchings are grouped by the §4.2 bottom-up coalescer
+into rounds of up to ``C`` sub-matchings; each round ships as few
+``lax.ppermute`` collectives as the round's pair structure allows (one,
+when traffic is pair-concentrated), each carrying a stacked multi-block
+payload.
 """
 
 from __future__ import annotations
@@ -34,17 +38,44 @@ Perm = tuple[tuple[int, int], ...]
 
 
 @dataclasses.dataclass(frozen=True)
+class CommGroup:
+    """One ``lax.ppermute`` of a coalesced round.
+
+    ``perm`` is the merged partial permutation (the group's distinct
+    (src, dst) pairs); its payload stacks ``rows`` KV blocks per edge —
+    each sender packs its blocks for its (single) destination into the
+    leading rows and trash-pads the rest.
+    """
+    perm: Perm
+    rows: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRound:
+    """A coalesced communication round: <= C sub-matchings, merged into
+    ppermute groups (§4.2 bottom-up coalescer)."""
+    groups: tuple[CommGroup, ...]
+
+    @property
+    def n_rows(self) -> int:
+        """Total payload rows of the round (plan-table row axis)."""
+        return sum(g.rows for g in self.groups)
+
+
+@dataclasses.dataclass(frozen=True)
 class StaticSpec:
     """Hashable jit-static schedule description."""
     n_workers: int
     block_size: int
     slots: int                  # schedule-layout blocks per worker
     ext_slots: int              # receive-buffer depth (after coloring)
-    n_rounds: int               # KV communication rounds (matchings)
+    coalesce: int               # bottom-up coalescer degree C (>= 1)
+    n_matchings: int            # Delta: congestion-free KV matchings
+    n_rounds: int               # coalesced KV rounds = ceil(Delta / C)
     n_steps: int                # compute steps (>= n_rounds when comm)
-    n_resh_rounds: int          # reshuffle rounds
-    comm_perms: tuple[Perm, ...]
-    resh_perms: tuple[Perm, ...]
+    n_resh_rounds: int          # coalesced reshuffle rounds
+    comm_rounds: tuple[CommRound, ...]
+    resh_rounds: tuple[CommRound, ...]
     causal: bool
 
     @property
@@ -55,26 +86,41 @@ class StaticSpec:
     def q_trash(self) -> int:          # schedule-layout trash slot index
         return self.slots
 
+    @property
+    def n_comm_launches(self) -> int:
+        """ppermute collectives on the KV hot path (vs Delta uncoalesced)."""
+        return sum(len(r.groups) for r in self.comm_rounds)
+
+    @property
+    def n_resh_launches(self) -> int:
+        return sum(len(r.groups) for r in self.resh_rounds)
+
 
 @dataclasses.dataclass
 class PlanArrays:
     """Per-worker runtime tables ``[n_workers, ...]`` int32, plus
     *replicated* per-block metadata (``blk_*``: [n_blocks+1, bs], shared
     by all workers — avoids the O(N·T·bs) copies of a per-step layout;
-    the +1 row is the all-PAD trash block)."""
-    send_slot: np.ndarray        # [N, R]  local kv slot to send (0 if none)
-    recv_slot: np.ndarray        # [N, R]  ext-buffer index to write arrival
+    the +1 row is the all-PAD trash block).
+
+    Communication tables are *row*-indexed: a coalesced round's groups
+    ship stacked payloads, and the row axis ``S`` concatenates every
+    group's rows (a round's groups own static, disjoint row ranges).
+    Rows a worker does not participate in point at trash slots."""
+    send_slot: np.ndarray        # [N, R', S] local kv slot per payload row
+    #                              (trash when the worker idles in it)
+    recv_slot: np.ndarray        # [N, R', S] ext-buffer index per row
     step_q: np.ndarray           # [N, T]  q slot (q_trash = noop)
     step_kv: np.ndarray          # [N, T]  extended kv index (kv_trash=noop)
     step_kv_blk: np.ndarray      # [N, T]  block id consumed (mask lookup)
     sched_blk: np.ndarray        # [N, slots+1] block id per schedule slot
     blk_seg: np.ndarray          # [n_blocks+1, bs] REPLICATED
     blk_pos: np.ndarray          # [n_blocks+1, bs] REPLICATED
-    resh_send_slot: np.ndarray   # [N, R2] user slot to send
-    resh_dst_slot: np.ndarray    # [N, R2] schedule slot to write (trash ok)
+    resh_send_slot: np.ndarray   # [N, R2', S2] user slot to send per row
+    resh_dst_slot: np.ndarray    # [N, R2', S2] schedule slot to write
     resh_local_src: np.ndarray   # [N, slots] user slot or -1
-    restore_send_slot: np.ndarray  # [N, R2] schedule slot of o to send back
-    restore_dst_slot: np.ndarray   # [N, R2] user slot to write (trash ok)
+    restore_send_slot: np.ndarray  # [N, R2', S2] schedule slot of o to send
+    restore_dst_slot: np.ndarray   # [N, R2', S2] user slot to write
     restore_local_src: np.ndarray  # [N, slots] schedule slot or -1
 
 
@@ -89,6 +135,9 @@ class Schedule:
     comm_edges: list[plannerlib.Edge]
     resh_edges: list[plannerlib.Edge]
     comm_matchings: list[list[plannerlib.Edge]]
+    comm_windows: list[list[list[plannerlib.Edge]]]   # coalesced rounds
+    comm_groupings: list[list[tuple]]   # per round: (perm, rows, edges)
+    resh_groupings: list[list[tuple]]
     stream_owner: np.ndarray
     slot_of_block: np.ndarray               # [n_blocks] schedule slot
     pairs_per_worker: np.ndarray
@@ -98,8 +147,25 @@ class Schedule:
         return (self.spec,)
 
 
-def _perm_of_matching(matching: Sequence[plannerlib.Edge]) -> Perm:
-    return tuple(sorted((int(s), int(d)) for s, d, _ in matching))
+def _coalesced_rounds(matchings: list[list[plannerlib.Edge]], degree: int
+                      ) -> tuple[list[list[list[plannerlib.Edge]]],
+                                 list[list[tuple]],
+                                 tuple[CommRound, ...]]:
+    """Window ``matchings`` into coalesced rounds of <= ``degree`` and
+    partition each window's edges into ppermute groups.
+
+    Returns ``(windows, groupings, rounds)``: ``groupings[r]`` is the
+    planner's per-round group list (with edge assignments, used to build
+    the plan tables); ``rounds`` is the static executor view.
+    """
+    windows = plannerlib.coalesce_matchings(matchings, degree)
+    groupings = [plannerlib.group_coalesced_round(win) for win in windows]
+    rounds = tuple(
+        CommRound(groups=tuple(
+            CommGroup(perm=perm, rows=rows)
+            for perm, rows, _ in grouping))
+        for grouping in groupings)
+    return windows, groupings, rounds
 
 
 def make_schedule(
@@ -112,6 +178,7 @@ def make_schedule(
         n_kv_heads: int = 8,
         head_dim: int = 128,
         causal: bool = True,
+        coalesce: int = 1,                      # §4.2 bottom-up coalescer C
         assignment: np.ndarray | None = None,   # override (baseline policies)
         speeds: np.ndarray | None = None,
         locality: bool | str = "auto",
@@ -156,14 +223,23 @@ def make_schedule(
             slot_of[b] = s
 
     # ---- communication plan ------------------------------------------------
+    coalesce = max(1, int(coalesce))
     comm_edges = plannerlib.build_comm_edges(assignment, deps)
     matchings = plannerlib.decompose_matchings(comm_edges, n_workers)
-    n_rounds = len(matchings)
-    # arrival round of each remote block at each worker
+    n_matchings = len(matchings)
+    # bottom-up coalescer (§4.2): C consecutive matchings -> one round
+    windows, comm_groupings, comm_rounds = _coalesced_rounds(
+        matchings, coalesce)
+    n_rounds = len(windows)
+    # arrival (coalesced) round of each remote block at each worker, and
+    # the per-round arrival lists the receive-buffer allocator colors
     arrival: dict[tuple[int, int], int] = {}
-    for r, m in enumerate(matchings):
-        for s, d, j in m:
-            arrival[(d, int(j))] = r
+    arrivals_by_round: dict[tuple[int, int], list[int]] = defaultdict(list)
+    for r, win in enumerate(windows):
+        for m in win:
+            for s, d, j in m:
+                arrival[(d, int(j))] = r
+                arrivals_by_round[(d, r)].append(int(j))
 
     # ---- per-worker pair scheduling ----------------------------------------
     # pairs[w] = list of (q_slot, kv_block, is_local)
@@ -207,31 +283,31 @@ def make_schedule(
         for t, (qs, j, is_local) in enumerate(seq):
             if not is_local:
                 last_use[(w, j)] = t
-    arrivals_by_round = {(d, r): j
-                         for (d, j), r in arrival.items()}
     alloc = plannerlib.allocate_recv_slots(
-        arrivals_by_round, last_use, n_rounds, n_workers)
+        dict(arrivals_by_round), last_use, n_rounds, n_workers)
     ext = max(alloc.n_slots, 1 if n_rounds else 0)
 
     # ---- reshuffle plan ------------------------------------------------------
     resh_edges = plannerlib.build_reshuffle_edges(stream_owner, assignment)
     resh_matchings = plannerlib.decompose_matchings(resh_edges, n_workers)
-    n_resh = len(resh_matchings)
+    resh_windows, resh_groupings, resh_rounds = _coalesced_rounds(
+        resh_matchings, coalesce)
+    n_resh = len(resh_windows)
 
     spec = StaticSpec(
         n_workers=n_workers, block_size=block_size, slots=slots,
-        ext_slots=ext, n_rounds=n_rounds, n_steps=n_steps,
-        n_resh_rounds=n_resh,
-        comm_perms=tuple(_perm_of_matching(m) for m in matchings),
-        resh_perms=tuple(_perm_of_matching(m) for m in resh_matchings),
-        causal=causal)
+        ext_slots=ext, coalesce=coalesce, n_matchings=n_matchings,
+        n_rounds=n_rounds, n_steps=n_steps, n_resh_rounds=n_resh,
+        comm_rounds=comm_rounds, resh_rounds=resh_rounds, causal=causal)
 
     arrays = _build_arrays(batch, spec, assignment, stream_owner, slot_of,
-                           matchings, resh_matchings, step_sched, arrival,
+                           comm_groupings, resh_groupings, step_sched,
                            alloc)
     return Schedule(batch=batch, assignment=assignment, deps=deps, spec=spec,
                     arrays=arrays, comm_edges=comm_edges,
                     resh_edges=resh_edges, comm_matchings=matchings,
+                    comm_windows=windows, comm_groupings=comm_groupings,
+                    resh_groupings=resh_groupings,
                     stream_owner=stream_owner, slot_of_block=slot_of,
                     pairs_per_worker=pairs_per_worker)
 
@@ -245,21 +321,28 @@ def _block_meta(batch: BlockedBatch, bid: int) -> tuple[np.ndarray, np.ndarray]:
 def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
                   assignment: np.ndarray, stream_owner: np.ndarray,
                   slot_of: np.ndarray,
-                  matchings: list[list[plannerlib.Edge]],
-                  resh_matchings: list[list[plannerlib.Edge]],
+                  comm_groupings: list[list[tuple]],
+                  resh_groupings: list[list[tuple]],
                   step_sched: list[list[tuple[int, int, bool]]],
-                  arrival: dict[tuple[int, int], int],
                   alloc: plannerlib.SlotAllocation) -> PlanArrays:
     N, R, T = spec.n_workers, spec.n_rounds, spec.n_steps
     R2, bs, slots = spec.n_resh_rounds, spec.block_size, spec.slots
     kv_trash, q_trash = spec.kv_trash, spec.q_trash
+    # payload-row axis: concatenation of each round's group rows, padded
+    # to the widest round
+    n_rows = max(1, max((r_.n_rows for r_ in spec.comm_rounds), default=1))
+    n_rows2 = max(1, max((r_.n_rows for r_ in spec.resh_rounds), default=1))
 
-    send_slot = np.zeros((N, max(R, 1)), dtype=np.int32)
-    recv_slot = np.full((N, max(R, 1)), kv_trash, dtype=np.int32)
-    for r, m in enumerate(matchings):
-        for s, d, j in m:
-            send_slot[s, r] = slot_of[j]
-            recv_slot[d, r] = slots + alloc.slot_of_arrival[(d, r)]
+    send_slot = np.full((N, max(R, 1), n_rows), kv_trash, dtype=np.int32)
+    recv_slot = np.full((N, max(R, 1), n_rows), kv_trash, dtype=np.int32)
+    for r, grouping in enumerate(comm_groupings):
+        off = 0
+        for perm, rows, edges in grouping:
+            for row, lane, s, d, j in edges:
+                send_slot[s, r, off + row] = slot_of[j]
+                recv_slot[d, r, off + row] = \
+                    slots + alloc.slot_of_arrival[(d, j)]
+            off += rows
 
     n_blocks = batch.n_blocks
     step_q = np.full((N, max(T, 1)), q_trash, dtype=np.int32)
@@ -274,8 +357,7 @@ def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
             if is_local:
                 step_kv[w, t] = slot_of[j]
             else:
-                r = arrival[(w, j)]
-                step_kv[w, t] = slots + alloc.slot_of_arrival[(w, r)]
+                step_kv[w, t] = slots + alloc.slot_of_arrival[(w, j)]
 
     # replicated per-block mask metadata (+ trash row of PADs)
     blk_seg = np.concatenate(
@@ -288,18 +370,23 @@ def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
     for b in range(n_blocks):
         sched_blk[int(assignment[b]), int(slot_of[b])] = b
 
-    resh_send = np.zeros((N, max(R2, 1)), dtype=np.int32)
-    resh_dst = np.full((N, max(R2, 1)), q_trash, dtype=np.int32)
-    rest_send = np.zeros((N, max(R2, 1)), dtype=np.int32)
-    rest_dst = np.full((N, max(R2, 1)), slots, dtype=np.int32)  # user trash
-    for r, m in enumerate(resh_matchings):
-        for u, w, b in m:
-            resh_send[u, r] = b % slots          # user slot on sender
-            resh_dst[w, r] = slot_of[b]          # schedule slot on receiver
-            # restore: o moves back w -> u (reversed matching, still a
-            # matching)
-            rest_send[w, r] = slot_of[b]
-            rest_dst[u, r] = b % slots
+    # trash defaults: sends gather the senders' trash rows (user layout
+    # row `slots`, accumulator row q_trash), writes land on trash rows
+    resh_send = np.full((N, max(R2, 1), n_rows2), slots, dtype=np.int32)
+    resh_dst = np.full((N, max(R2, 1), n_rows2), q_trash, dtype=np.int32)
+    rest_send = np.full((N, max(R2, 1), n_rows2), q_trash, dtype=np.int32)
+    rest_dst = np.full((N, max(R2, 1), n_rows2), slots, dtype=np.int32)
+    for r, grouping in enumerate(resh_groupings):
+        off = 0
+        for perm, rows, edges in grouping:
+            for row, lane, u, w, b in edges:
+                resh_send[u, r, off + row] = b % slots   # sender user slot
+                resh_dst[w, r, off + row] = slot_of[b]   # receiver slot
+                # restore: o moves back w -> u through the same group's
+                # reversed permutation (still a partial permutation)
+                rest_send[w, r, off + row] = slot_of[b]
+                rest_dst[u, r, off + row] = b % slots
+            off += rows
 
     resh_local = np.full((N, slots), -1, dtype=np.int32)
     rest_local = np.full((N, slots), -1, dtype=np.int32)

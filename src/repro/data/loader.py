@@ -1,8 +1,10 @@
 """Synthetic learnable corpus + packed-stream batch loader.
 
-Documents are cyclic repetitions of a random seed pattern (induction
-structure), so next-token loss visibly decreases during the example
-training runs; tokens are otherwise uniform over the vocab.
+Documents are cyclic repetitions of patterns drawn from a small
+per-loader pattern bank (induction structure over a *stationary*
+corpus), so next-token loss visibly decreases within a handful of steps
+even though every batch is fresh; tokens are otherwise uniform over the
+vocab.
 
 The loader emits the executor's packed frame layout directly:
 ``tokens/labels/positions/loss_mask [F, tokens_per_worker]`` plus the
@@ -45,9 +47,15 @@ class Batch:
     composition_id: int       # schedule-bucket index
 
 
-def _doc_tokens(rng: np.random.Generator, length: int, vocab: int,
-                pattern_len: int = 64) -> np.ndarray:
-    p = rng.integers(1, vocab, size=min(pattern_len, max(2, length)))
+def _doc_tokens(rng: np.random.Generator, length: int,
+                bank: np.ndarray) -> np.ndarray:
+    """One document: a rotated bank pattern tiled to ``length``.
+
+    The bank is fixed per loader, so the token *distribution* is
+    stationary across steps (learnable bigrams) while each document
+    still varies by pattern choice and rotation."""
+    p = bank[int(rng.integers(len(bank)))]
+    p = np.roll(p, -int(rng.integers(len(p))))[:max(2, min(len(p), length))]
     reps = -(-length // len(p))
     return np.tile(p, reps)[:length]
 
@@ -65,6 +73,9 @@ class SyntheticLoader:
         budget = n_frames * tokens_per_worker
         self.compositions = distributions.batch_compositions(
             dist, budget, n_buckets, seed=seed, uniform_len=uniform_len)
+        bank_rng = np.random.default_rng((seed, 0x5eed))
+        self.pattern_bank = bank_rng.integers(
+            1, max(vocab_size, 2), size=(16, 64))
         self.state = LoaderState(step=0, seed=seed)
 
     def composition(self, step: int) -> tuple[int, list[int]]:
@@ -85,7 +96,7 @@ class SyntheticLoader:
             mask = np.zeros(n_tok, np.float32)
             off = 0
             for L in seqlens:
-                doc = _doc_tokens(rng, L, self.vocab)
+                doc = _doc_tokens(rng, L, self.pattern_bank)
                 toks[off:off + L] = doc
                 labels[off:off + L - 1] = doc[1:]
                 mask[off:off + L - 1] = 1.0

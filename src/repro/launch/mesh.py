@@ -10,6 +10,19 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]
+          ) -> jax.sharding.Mesh:
+    # ``jax.sharding.AxisType`` only exists on newer JAX; on 0.4.x every
+    # axis is Auto already.  ``repro.compat.install()`` (run on package
+    # import) backfills the enum and makes ``make_mesh`` tolerate the
+    # kwarg, so the getattr guard only matters if jax was patched away.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
 
@@ -19,13 +32,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]
               ) -> jax.sharding.Mesh:
     """Generic helper for tests/examples (e.g. (4, 2) x (data, model))."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)

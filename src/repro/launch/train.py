@@ -58,6 +58,7 @@ def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
         seqlens, n_cp, tokens_per_worker, pcfg.block_size,
         n_q_heads=max(nh, 1), n_kv_heads=max(nkv, 1),
         head_dim=max(cfg.head_dim, 1), causal=True, speeds=speeds,
+        coalesce=pcfg.coalesce,
         locality={"auto": "auto", "on": True, "off": False}.get(
             str(pcfg.locality), pcfg.locality))
 
@@ -159,6 +160,8 @@ def main(argv=None):
                    choices=["uniform", "real_world", "less_long_tailed",
                             "bimodal"])
     p.add_argument("--block-size", type=int, default=1024)
+    p.add_argument("--coalesce", type=int, default=16,
+                   help="bottom-up coalescer degree C (1 = off)")
     p.add_argument("--tokens-per-worker", type=int, default=8192)
     p.add_argument("--lr", type=float, default=3e-4)
     p.add_argument("--override", action="append", default=[])
@@ -181,7 +184,8 @@ def main(argv=None):
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = apply_overrides(cfg, args.override)
-    pcfg = ParallelConfig(block_size=args.block_size)
+    pcfg = ParallelConfig(block_size=args.block_size,
+                          coalesce=args.coalesce)
     tcfg = TrainConfig(lr=args.lr, warmup_steps=2, total_steps=args.steps)
 
     model = Model(cfg, tp=tp)

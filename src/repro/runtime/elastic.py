@@ -20,12 +20,17 @@ from typing import Sequence
 
 import numpy as np
 
+from ..configs.base import ParallelConfig
 from ..core.schedule import Schedule, make_schedule
+
+# replanned schedules keep the configured coalescing by default — an
+# elastic resize must not silently drop the launch amortization
+_DEFAULT_COALESCE = ParallelConfig().coalesce
 
 
 def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            *, n_q_heads: int, n_kv_heads: int, head_dim: int,
-           causal: bool = True,
+           causal: bool = True, coalesce: int = _DEFAULT_COALESCE,
            speeds: np.ndarray | None = None) -> Schedule:
     """Rebuild the FCP schedule for a new worker count.
 
@@ -35,7 +40,8 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     tpw = -(-total // (new_n_workers * block_size)) * block_size
     return make_schedule(seqlens, new_n_workers, tpw, block_size,
                          n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
-                         head_dim=head_dim, causal=causal, speeds=speeds)
+                         head_dim=head_dim, causal=causal,
+                         coalesce=coalesce, speeds=speeds)
 
 
 def reshape_frames(arr: np.ndarray, new_n_workers: int) -> np.ndarray:

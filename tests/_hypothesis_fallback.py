@@ -1,0 +1,41 @@
+"""Fallback for property-based tests when ``hypothesis`` is absent.
+
+Minimal installs (the CI container ships only jax + numpy + pytest) must
+still *collect and run* every non-property test, so test modules import
+hypothesis through this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+With hypothesis installed nothing changes.  Without it, ``@given`` tests
+are skipped (marked, not crashed at collection), ``@settings`` is a
+no-op, and ``st.<anything>(...)`` returns inert placeholders so
+decorator-time strategy construction succeeds.
+"""
+
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (property test)")(fn)
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        def strategy(*_args, **_kwargs):
+            return None
+        return strategy
+
+
+st = _Strategies()

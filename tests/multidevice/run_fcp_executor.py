@@ -27,16 +27,17 @@ from repro.kernels import ref                                   # noqa: E402
 
 def run_case(seqlens, n_workers, tokens_per_worker, block_size, mesh_shape,
              mesh_axes, hq, kh, d, causal, policy="fcp", n_pods=1, seed=0,
-             check_grad=True):
+             check_grad=True, coalesce=1, return_out=False):
     rng = np.random.default_rng(seed)
     sched = make_schedule(seqlens, n_workers, tokens_per_worker, block_size,
                           n_q_heads=hq, n_kv_heads=kh, head_dim=d,
-                          causal=causal)
+                          causal=causal, coalesce=coalesce)
     if policy == "ring":    # baselines run through the same executor
         a = policies.assign_ring(sched.batch, n_workers)
         sched = make_schedule(seqlens, n_workers, tokens_per_worker,
                               block_size, n_q_heads=hq, n_kv_heads=kh,
-                              head_dim=d, causal=causal, assignment=a)
+                              head_dim=d, causal=causal, assignment=a,
+                              coalesce=coalesce)
     n_tok = sched.batch.n_tokens                 # per pod
     total = n_pods * n_tok
     q = jnp.asarray(rng.normal(size=(total, hq, d)), jnp.float32)
@@ -97,6 +98,8 @@ def run_case(seqlens, n_workers, tokens_per_worker, block_size, mesh_shape,
             gerr = np.abs(np.asarray(a) - np.asarray(b)).max()
             scale = max(1e-6, np.abs(np.asarray(b)).max())
             assert gerr / scale < 5e-4, f"d{name} mismatch: {gerr} ({scale})"
+    if return_out:
+        return err, o
     return err
 
 
@@ -127,6 +130,22 @@ def main():
     for i, c in enumerate(cases):
         err = run_case(**c, seed=100 + i)
         print(f"case {i}: max fwd err {err:.2e}  OK")
+
+    # ---- §4.2 coalescer: C > 1 must match both the oracle and the
+    # C = 1 schedule of the same batch (same assignment, same pairs —
+    # only comm round structure changes)
+    base = dict(seqlens=[4096, 2048, 1024, 512, 300, 200], n_workers=8,
+                tokens_per_worker=1024, block_size=256, mesh_shape=(8,),
+                mesh_axes=("data",), hq=4, kh=2, d=32, causal=True)
+    _, o1 = run_case(**base, seed=7, check_grad=False, coalesce=1,
+                     return_out=True)
+    for C in (4, 16):
+        errc, oc = run_case(**base, seed=7, check_grad=(C == 4),
+                            coalesce=C, return_out=True)
+        dev = np.abs(oc - o1).max()
+        assert dev < 1e-4, f"coalesce={C} output drifted from C=1: {dev}"
+        print(f"coalesce={C}: max fwd err {errc:.2e}  "
+              f"|o - o(C=1)| {dev:.2e}  OK")
     print("ALL MULTIDEVICE EXECUTOR CASES PASSED")
     return 0
 

@@ -3,7 +3,11 @@ planner, schedule)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # minimal install: skip @given only
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import blocks as blockslib
 from repro.core import cost_model as cm
@@ -184,16 +188,28 @@ def test_coalescer_groups():
 # full schedule invariants
 # --------------------------------------------------------------------------
 
+def _arrival_tables(sched):
+    """(worker, block) -> (coalesced round, committed ext-kv index)."""
+    arr = sched.arrays
+    arrival, arr_slot = {}, {}
+    for r, grouping in enumerate(sched.comm_groupings):
+        off = 0
+        for perm, rows, edges in grouping:
+            for row, lane, s, d, j in edges:
+                arrival[(d, j)] = r
+                arr_slot[(d, j)] = int(arr.recv_slot[d, r, off + row])
+            off += rows
+    return arrival, arr_slot
+
+
 def _check_schedule_invariants(sched, n_workers):
     spec, arr = sched.spec, sched.arrays
     # every worker holds exactly `slots` blocks
     counts = np.bincount(sched.assignment, minlength=n_workers)
     assert (counts == spec.slots).all()
-    # every remote dependency arrives before (or at round) its compute step
-    arrival = {}
-    for r, m in enumerate(sched.comm_matchings):
-        for s, d, j in m:
-            arrival[(d, j)] = r
+    # every remote dependency arrives before its compute step and is not
+    # overwritten in between (coalesced-round granularity)
+    arrival, arr_slot = _arrival_tables(sched)
     for w in range(n_workers):
         for t in range(spec.n_steps):
             q = arr.step_q[w, t]
@@ -201,25 +217,69 @@ def _check_schedule_invariants(sched, n_workers):
                 continue
             kv = arr.step_kv[w, t]
             if kv >= spec.slots and kv < spec.kv_trash:
-                # received block: some arrival must map to this ext slot at
-                # a round < t with no interposing overwrite before t
-                ok = False
-                for (ww, j), r in arrival.items():
-                    if ww != w or r >= t:
-                        continue
-                    if arr.recv_slot[w, r] != kv:
-                        continue
-                    # not overwritten in (r, t)
-                    clobbered = any(
-                        arr.recv_slot[w, r2] == kv
-                        for r2 in range(r + 1, min(t, spec.n_rounds)))
-                    if not clobbered:
-                        ok = True
-                if not ok:
-                    raise AssertionError(f"worker {w} step {t}: stale slot")
+                j = int(arr.step_kv_blk[w, t])
+                assert (w, j) in arrival, f"worker {w} step {t}: no arrival"
+                r = arrival[(w, j)]
+                assert r < t, f"worker {w} step {t}: consumes round {r}"
+                assert arr_slot[(w, j)] == kv, \
+                    f"worker {w} step {t}: wrong slot"
+                clobbered = any(
+                    s2 == kv and r < r2 < t
+                    for (w2, j2), s2 in arr_slot.items()
+                    if w2 == w and j2 != j
+                    for r2 in (arrival[(w2, j2)],))
+                assert not clobbered, f"worker {w} step {t}: stale slot"
     # all pairs are scheduled exactly once
     n_sched = int(np.sum(arr.step_q != spec.q_trash))
     assert n_sched == int(sched.pairs_per_worker.sum())
+
+
+def _check_coalescing_invariants(sched):
+    """§4.2 coalescer invariants on a built schedule."""
+    spec = sched.spec
+    C = spec.coalesce
+    # rounds = ceil(Delta / C)
+    assert spec.n_rounds == -(-spec.n_matchings // C)
+    all_edges = []
+    for r, (win, grouping) in enumerate(zip(sched.comm_windows,
+                                            sched.comm_groupings)):
+        assert len(win) <= C
+        win_edges = sorted((int(s), int(d), int(j))
+                           for m in win for s, d, j in m)
+        grp_edges = sorted((s, d, int(j))
+                           for perm, rows, edges in grouping
+                           for row, lane, s, d, j in edges)
+        # grouping preserves the window's edge multiset exactly
+        assert win_edges == grp_edges
+        all_edges.extend(win_edges)
+        sends = np.zeros(spec.n_workers, int)
+        recvs = np.zeros(spec.n_workers, int)
+        for perm, rows, edges in grouping:
+            # each group's distinct pairs form a partial permutation
+            srcs = [p[0] for p in perm]
+            dsts = [p[1] for p in perm]
+            assert len(set(srcs)) == len(srcs)
+            assert len(set(dsts)) == len(dsts)
+            assert 1 <= rows <= C
+            per_pair = {}
+            for row, lane, s, d, j in edges:
+                assert 0 <= row < rows and 0 <= lane < len(win)
+                per_pair.setdefault((s, d), []).append(row)
+                sends[s] += 1
+                recvs[d] += 1
+            for (s, d), rws in per_pair.items():
+                assert (s, d) in perm
+                assert sorted(rws) == list(range(len(rws)))  # packed FIFO
+        # per coalesced round each worker moves <= C blocks
+        assert sends.max(initial=0) <= C
+        assert recvs.max(initial=0) <= C
+    assert sorted(all_edges) == sorted(
+        (int(s), int(d), int(j)) for s, d, j in sched.comm_edges)
+    # committed receive slots stay within the allocated buffer depth
+    ext = sched.arrays.recv_slot[sched.arrays.recv_slot < spec.kv_trash]
+    if ext.size:
+        assert ext.min() >= spec.slots
+        assert ext.max() < spec.slots + spec.ext_slots
 
 
 @pytest.mark.parametrize("seqlens", [
@@ -235,6 +295,65 @@ def test_schedule_invariants(seqlens):
     sched = make_schedule(seqlens, n_workers, tpw, 1024,
                           n_q_heads=4, n_kv_heads=2, head_dim=64)
     _check_schedule_invariants(sched, n_workers)
+
+
+@pytest.mark.parametrize("coalesce", [1, 2, 4, 16])
+@pytest.mark.parametrize("seqlens", [
+    [16384, 512, 512, 300, 15000],       # long-tailed
+    [4096] * 8,                          # uniform
+])
+def test_coalesced_schedule_invariants(seqlens, coalesce):
+    """§4.2 coalescer: ceil(Delta/C) rounds, <= C blocks per worker per
+    round, matching-structured groups, in-bounds receive slots — and the
+    usual schedule invariants at coalesced-round granularity."""
+    total = sum(seqlens)
+    n_workers = 4
+    tpw = ((total + n_workers * 1024 - 1) // (n_workers * 1024)) * 1024
+    sched = make_schedule(seqlens, n_workers, tpw, 1024,
+                          n_q_heads=4, n_kv_heads=2, head_dim=64,
+                          coalesce=coalesce)
+    assert sched.spec.coalesce == coalesce
+    _check_schedule_invariants(sched, n_workers)
+    _check_coalescing_invariants(sched)
+
+
+def test_coalesced_recv_buffer_depth_is_max_live():
+    """The allocator's n_slots bounds every committed slot, and coalescing
+    never shrinks the buffer below the number of blocks arriving in one
+    round for one worker (they are all live simultaneously)."""
+    seqlens = [16384, 512, 512, 300, 15000]
+    n_workers, bs = 4, 1024
+    total = sum(seqlens)
+    tpw = ((total + n_workers * bs - 1) // (n_workers * bs)) * bs
+    sched = make_schedule(seqlens, n_workers, tpw, bs, n_q_heads=4,
+                          n_kv_heads=2, head_dim=64, coalesce=4)
+    per_round = {}
+    for r, win in enumerate(sched.comm_windows):
+        for m in win:
+            for s, d, j in m:
+                per_round[(d, r)] = per_round.get((d, r), 0) + 1
+    if per_round:
+        assert sched.spec.ext_slots >= max(per_round.values())
+
+
+def test_coalesce_launch_amortization_long_docs():
+    """Pair-concentrated traffic (few long documents) must need fewer
+    collective launches than the uncoalesced Delta."""
+    seqlens = [65536, 32768, 16384] + [2048] * 4
+    n_workers, bs = 8, 2048
+    total = sum(seqlens)
+    tpw = ((total + n_workers * bs - 1) // (n_workers * bs)) * bs
+    s1 = make_schedule(seqlens, n_workers, tpw, bs, n_q_heads=8,
+                       n_kv_heads=8, head_dim=128, coalesce=1)
+    s16 = make_schedule(seqlens, n_workers, tpw, bs, n_q_heads=8,
+                        n_kv_heads=8, head_dim=128, coalesce=16)
+    assert s16.spec.n_matchings == s1.spec.n_matchings
+    assert s16.spec.n_comm_launches <= s1.spec.n_comm_launches
+    assert s16.spec.n_comm_launches < s16.spec.n_matchings
+    # wire padding stays within the planner's cap
+    shipped = sum(len(g.perm) * g.rows
+                  for r in s16.spec.comm_rounds for g in r.groups)
+    assert shipped <= plannerlib.COALESCE_PAD_CAP * len(s16.comm_edges)
 
 
 @given(st.lists(st.integers(50, 9000), min_size=1, max_size=12),

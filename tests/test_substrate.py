@@ -8,7 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # minimal install: skip @given only
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import CheckpointManager, checkpointer
 from repro.data import SyntheticLoader, distributions
