@@ -1,0 +1,166 @@
+"""Wall-clock executor benchmark: fused vs per-step attention.
+
+Runs the full distributed FCP attention (reshuffle -> coalesced rounds
+-> restore) fwd+bwd on 8 host devices over a real_world-distributed
+batch and times one optimization-relevant step (loss + grads) per
+implementation.  Writes ``BENCH_executor.json`` at the repo root — the
+start of the wall-clock perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_executor [--quick]
+
+Honesty notes: host devices share one CPU, so absolute numbers are not
+TPU numbers; the fused-vs-per-step *ratio* measures exactly what the
+fusion removes (per-step launch/merge overhead and accumulator
+read-modify-write traffic), which is the overhead class FlashCP/DCP
+identify as erasing block-granular scheduling gains.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.core import executor, make_schedule                  # noqa: E402
+from repro.data.distributions import batch_compositions         # noqa: E402
+from repro.kernels import ops                                   # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def real_world_batch(budget: int, seed: int = 0) -> list[int]:
+    """Budget-exact real_world length multiset — the same sampler the
+    training loader uses, so the benchmark batch matches the workload
+    every other surface sees."""
+    return batch_compositions("real_world", budget, 1, seed=seed)[0]
+
+
+def bench(impl: str, sched, mesh, tpw, q, k, v, key, iters: int):
+    cfg = executor.ExecConfig(impl=impl)
+    tables = executor.schedule_tables(sched)
+    total, hq, d = q.shape
+
+    def attn(q, k, v):
+        F = total // tpw
+
+        def sh(x):
+            return x.reshape(F, tpw, x.shape[-2], x.shape[-1])
+
+        o = executor.fcp_attention(sh(q), sh(k), sh(v), tables,
+                                   spec=sched.spec, mesh=mesh,
+                                   cp_axis="data", head_axis=None, cfg=cfg)
+        return o.reshape(total, hq, d)
+
+    def loss(q, k, v):
+        return jnp.sum(attn(q, k, v) * key)
+
+    step = jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+    t0 = time.perf_counter()
+    out = step(q, k, v)
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = step(q, k, v)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    med = float(np.median(times))
+    launches = ops.count_attention_launches(attn, q, k, v)
+    return {
+        "fwd_bwd_ms": med * 1e3,
+        "tokens_per_sec": total / med,
+        "compile_s": compile_s,
+        "attention_launches_per_worker_per_layer":
+            launches["fused" if cfg.fused else "step"],
+    }
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    # default regime: 128-token blocks (the fine-grained-block setting
+    # where per-step launch/merge overhead — what fusion removes — is
+    # the dominant cost class) with llama-style 8:1 GQA so KV comm bytes
+    # don't dilute the attention-side ratio.  Larger blocks shift time
+    # toward raw FLOPs, where both impls converge.
+    p.add_argument("--tokens-per-worker", type=int, default=512)
+    p.add_argument("--block-size", type=int, default=128)
+    p.add_argument("--heads", type=int, default=8)
+    p.add_argument("--kv-heads", type=int, default=1)
+    p.add_argument("--head-dim", type=int, default=64)
+    p.add_argument("--coalesce", type=int, default=16)
+    p.add_argument("--iters", type=int, default=20)
+    p.add_argument("--quick", action="store_true",
+                   help="CI sizing: fewer timing iterations")
+    p.add_argument("--out", default=str(ROOT / "BENCH_executor.json"))
+    args = p.parse_args(argv)
+    if args.quick:
+        args.iters = min(args.iters, 8)
+
+    n_workers = 8
+    tpw, bs = args.tokens_per_worker, args.block_size
+    seqlens = real_world_batch(n_workers * tpw)
+    sched = make_schedule(seqlens, n_workers, tpw, bs,
+                          n_q_heads=args.heads, n_kv_heads=args.kv_heads,
+                          head_dim=args.head_dim, causal=True,
+                          coalesce=args.coalesce)
+    spec = sched.spec
+    mesh = jax.make_mesh((n_workers,), ("data",))
+
+    rng = np.random.default_rng(0)
+    total = sched.batch.n_tokens
+    q = jnp.asarray(rng.normal(size=(total, args.heads, args.head_dim)),
+                    jnp.float32)
+    k = jnp.asarray(rng.normal(size=(total, args.kv_heads, args.head_dim)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(total, args.kv_heads, args.head_dim)),
+                    jnp.float32)
+    key = jnp.asarray(rng.normal(size=(total, args.heads, args.head_dim)),
+                      jnp.float32)
+
+    result = {
+        "bench": "fcp_executor_fwd_bwd",
+        "device": "cpu-host8",
+        "dist": "real_world",
+        "config": {
+            "n_workers": n_workers, "tokens_per_worker": tpw,
+            "block_size": bs, "heads": args.heads,
+            "kv_heads": args.kv_heads, "head_dim": args.head_dim,
+            "coalesce": args.coalesce, "iters": args.iters,
+            "seqlens": seqlens,
+        },
+        "schedule": {
+            "n_matchings": spec.n_matchings, "n_rounds": spec.n_rounds,
+            "n_steps": spec.n_steps, "n_runs": spec.n_runs,
+            "ext_slots": spec.ext_slots,
+        },
+    }
+    for name, impl in (("per_step", "xla"), ("fused", "fused_xla")):
+        print(f"benchmarking {name} ({impl}) ...", flush=True)
+        result[name] = bench(impl, sched, mesh, tpw, q, k, v, key,
+                             args.iters)
+        print(f"  {name}: {result[name]['fwd_bwd_ms']:.1f} ms/step, "
+              f"{result[name]['tokens_per_sec']:.0f} tok/s, "
+              f"{result[name]['attention_launches_per_worker_per_layer']}"
+              f" launches", flush=True)
+    result["speedup_fused_vs_per_step"] = (
+        result["per_step"]["fwd_bwd_ms"] / result["fused"]["fwd_bwd_ms"])
+    print(f"fused speedup: {result['speedup_fused_vs_per_step']:.2f}x")
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,3 +7,5 @@ cd "$(dirname "$0")/.."
 python -m pip install -e ".[dev]"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -x -q -m "not slow"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.bench_executor --quick

@@ -135,7 +135,13 @@ class ParallelConfig:
     coalesce: int = 16
     remat: bool = True
     remat_policy: str = "dots"    # "dots" | "nothing" (§Perf #2)
-    attention_impl: str = "xla"   # "pallas" on real TPU
+    # executor attention impl: per-step ("xla" | "pallas") or one fused
+    # launch per run ("fused_xla" | "fused" — the latter is the
+    # schedule-table-driven Pallas kernel, "fused_xla" its CPU fallback)
+    attention_impl: str = "xla"
+    attn_block_q: int = 256       # fused/pallas kernel q tile
+    attn_block_k: int = 256       # fused/pallas kernel kv tile
+    attn_interpret: bool = False  # pallas interpret mode (CPU testing)
     locality: str = "auto"        # affinity-aware LPT: "auto" | on | off
     chunked_loss: bool = False    # CE without full logits (§Perf #3)
     attn_out_bf16: bool = False   # executor restores o in bf16 (§Perf #4)

@@ -11,9 +11,12 @@ Runs a host-built :class:`~repro.core.schedule.Schedule` inside
   KV blocks — the §4.2 bottom-up coalescer) *before* the compute step that
   consumes the previous arrival, so XLA's async collective scheduler
   overlaps them (the paper's multi-buffer pipeline, §5);
-* **compute steps** — each step runs one (q-slot, kv-slot) partial
-  attention (``kernels.ops.block_attention``) and merges it into the
-  per-slot flash accumulator;
+* **compute runs** — the schedule groups the steps between two arrival
+  commits into a *run*.  The fused impls (``fused`` / ``fused_xla``)
+  issue ONE attention launch per run (``kernels.ops.fused_run_attention``:
+  step tables drive the KV gathers, flash accumulators touch HBM once
+  per run); the per-step impls (``pallas`` / ``xla``) run one
+  ``block_attention`` + merge per (q-slot, kv-slot) step;
 * received blocks land in a live-range-colored buffer (planner §4.2),
   keeping receive memory at max-live depth.
 
@@ -46,12 +49,20 @@ from .schedule import PlanArrays, Schedule, StaticSpec
 
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
-    impl: str = "xla"               # "pallas" on real TPU, "xla" on CPU
+    # "xla" / "pallas": one block_attention + merge per schedule step.
+    # "fused_xla" / "fused": ONE launch per run (vmap-batched XLA /
+    # schedule-table-driven Pallas kernel) — accumulators touch HBM once
+    # per run instead of once per step.
+    impl: str = "xla"
     block_q: int = 256
     block_k: int = 256
     interpret: bool = False         # pallas interpret mode (CPU tests)
     xla_chunk: int = 512
     out_dtype: str | None = None    # e.g. "bfloat16": halve restore bytes
+
+    @property
+    def fused(self) -> bool:
+        return self.impl in ("fused", "fused_xla")
 
 
 def plan_tables(arrays: PlanArrays) -> dict[str, jax.Array]:
@@ -118,10 +129,11 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
                 _gather_rows(k_ut, idx),
                 _gather_rows(v_ut, idx)], axis=1)   # [rows, hq+2kh, ...]
             recv = jax.lax.ppermute(payload, cp_axis, list(g.perm))
-            for i in range(g.rows):
-                qs = _set_row(qs, recv[i:i + 1, :hq], dst[off + i])
-                ks = _set_row(ks, recv[i:i + 1, hq:hq + kh], dst[off + i])
-                vs = _set_row(vs, recv[i:i + 1, hq + kh:], dst[off + i])
+            # one scatter per group (idle rows all land on the trash row)
+            didx = dst[off:off + g.rows]
+            qs = qs.at[didx].set(recv[:, :hq])
+            ks = ks.at[didx].set(recv[:, hq:hq + kh])
+            vs = vs.at[didx].set(recv[:, hq + kh:])
             off += g.rows
 
     # ---- extended KV buffer (local slots + colored receive slots + trash) -
@@ -134,16 +146,28 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
     acc_o = jnp.zeros((slots + 1, hq, bs, d), jnp.float32)
     acc_lse = jnp.full((slots + 1, hq, bs), NEG_INF, jnp.float32)
 
-    n_iter = max(spec.n_steps, spec.n_rounds)
-    for step in range(n_iter):
+    if cfg.fused:
+        # per-slot / per-step mask metadata, gathered once per call
+        q_seg = jnp.take(t["blk_seg"], t["sched_blk"], axis=0)
+        q_pos = jnp.take(t["blk_pos"], t["sched_blk"], axis=0)
+        k_seg = jnp.take(t["blk_seg"], t["step_kv_blk"], axis=0)
+        k_pos = jnp.take(t["blk_pos"], t["step_kv_blk"], axis=0)
+        if cfg.impl == "fused":
+            k_seg_b = jnp.take(t["blk_seg"], t["bwd_kv_blk"], axis=0)
+            k_pos_b = jnp.take(t["blk_pos"], t["bwd_kv_blk"], axis=0)
+
+    # run r computes between the ppermute issue and the arrival commit of
+    # round r: consumers of round r's blocks sit in runs > r (§4.2), and
+    # XLA overlaps the in-flight collective with run r's compute.
+    for r in range(spec.n_runs):
         arrivals = []               # [(row offset, group, payload), ...]
-        if step < spec.n_rounds:
+        if r < spec.n_rounds:
             # issue this round's ppermute group(s) first — independent of
             # the compute below, so XLA overlaps them (block pipeline).
             # Each group ships a stack of up to C KV blocks (coalescer).
-            snd = t["send_slot"][step]                  # [S] payload rows
+            snd = t["send_slot"][r]                     # [S] payload rows
             off = 0
-            for g in spec.comm_rounds[step].groups:
+            for g in spec.comm_rounds[r].groups:
                 idx = snd[off:off + g.rows]
                 payload = jnp.concatenate(
                     [_gather_rows(kxt, idx), _gather_rows(vxt, idx)],
@@ -152,36 +176,55 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
                     (off, g,
                      jax.lax.ppermute(payload, cp_axis, list(g.perm))))
                 off += g.rows
-        if step < spec.n_steps:
-            qslot = t["step_q"][step]
-            kvslot = t["step_kv"][step]
-            qi = _dyn_row(qs, qslot)[0]                  # [hq, bs, d]
-            qblk = _dyn_row(t["sched_blk"], qslot)[0]
-            sq_m = _dyn_row(t["blk_seg"], qblk)[0]
-            pq_m = _dyn_row(t["blk_pos"], qblk)[0]
-            kvblk = t["step_kv_blk"][step]
-            sk_m = _dyn_row(t["blk_seg"], kvblk)[0]
-            pk_m = _dyn_row(t["blk_pos"], kvblk)[0]
-            ki = _dyn_row(kxt, kvslot)[0]
-            vi = _dyn_row(vxt, kvslot)[0]
-            o_p, lse_p = ops.block_attention(
-                qi, ki, vi, sq_m, pq_m, sk_m, pk_m,
-                causal=spec.causal, impl=cfg.impl, block_q=cfg.block_q,
-                block_k=cfg.block_k, interpret=cfg.interpret,
-                xla_chunk=cfg.xla_chunk)
-            o_old = _dyn_row(acc_o, qslot)[0]
-            l_old = _dyn_row(acc_lse, qslot)[0]
-            o_new, l_new = ops.merge_partials(o_old, l_old, o_p, lse_p)
-            acc_o = _set_row(acc_o, o_new[None], qslot)
-            acc_lse = _set_row(acc_lse, l_new[None], qslot)
+        lo, hi = spec.run_starts[r], spec.run_starts[r + 1]
+        if hi > lo and cfg.fused:
+            # ONE fused launch for the whole run: step tables drive the
+            # KV gathers, accumulators touch HBM once per run.
+            tabs = {"step_q": t["step_q"][lo:hi],
+                    "step_kv": t["step_kv"][lo:hi],
+                    "q_seg": q_seg, "q_pos": q_pos,
+                    "k_seg": k_seg[lo:hi], "k_pos": k_pos[lo:hi]}
+            if cfg.impl == "fused":
+                tabs.update(bwd_q=t["bwd_q"][lo:hi],
+                            bwd_kv=t["bwd_kv"][lo:hi],
+                            k_seg_b=k_seg_b[lo:hi],
+                            k_pos_b=k_pos_b[lo:hi])
+            acc_o, acc_lse = ops.fused_run_attention(
+                qs, kxt, vxt, acc_o, acc_lse, tabs, causal=spec.causal,
+                impl="pallas" if cfg.impl == "fused" else "xla",
+                block_q=cfg.block_q, block_k=cfg.block_k,
+                interpret=cfg.interpret, xla_chunk=cfg.xla_chunk)
+        elif hi > lo:
+            for step in range(lo, hi):
+                qslot = t["step_q"][step]
+                kvslot = t["step_kv"][step]
+                qi = _dyn_row(qs, qslot)[0]              # [hq, bs, d]
+                qblk = _dyn_row(t["sched_blk"], qslot)[0]
+                sq_m = _dyn_row(t["blk_seg"], qblk)[0]
+                pq_m = _dyn_row(t["blk_pos"], qblk)[0]
+                kvblk = t["step_kv_blk"][step]
+                sk_m = _dyn_row(t["blk_seg"], kvblk)[0]
+                pk_m = _dyn_row(t["blk_pos"], kvblk)[0]
+                ki = _dyn_row(kxt, kvslot)[0]
+                vi = _dyn_row(vxt, kvslot)[0]
+                o_p, lse_p = ops.block_attention(
+                    qi, ki, vi, sq_m, pq_m, sk_m, pk_m,
+                    causal=spec.causal, impl=cfg.impl, block_q=cfg.block_q,
+                    block_k=cfg.block_k, interpret=cfg.interpret,
+                    xla_chunk=cfg.xla_chunk)
+                o_old = _dyn_row(acc_o, qslot)[0]
+                l_old = _dyn_row(acc_lse, qslot)[0]
+                o_new, l_new = ops.merge_partials(o_old, l_old, o_p, lse_p)
+                acc_o = _set_row(acc_o, o_new[None], qslot)
+                acc_lse = _set_row(acc_lse, l_new[None], qslot)
         if arrivals:
-            # commit the arrivals after compute: consumers run at step >=
-            # r+1 (round granularity — the §4.2 consumer constraint)
-            dst = t["recv_slot"][step]                  # [S] buffer slots
+            # commit the arrivals after compute: consumers sit in later
+            # runs (round granularity — the §4.2 consumer constraint)
+            dst = t["recv_slot"][r]                     # [S] buffer slots
             for off, g, recv in arrivals:
-                for i in range(g.rows):
-                    kxt = _set_row(kxt, recv[i:i + 1, :kh], dst[off + i])
-                    vxt = _set_row(vxt, recv[i:i + 1, kh:], dst[off + i])
+                didx = dst[off:off + g.rows]
+                kxt = kxt.at[didx].set(recv[:, :kh])
+                vxt = vxt.at[didx].set(recv[:, kh:])
 
     # ---- restore: schedule layout -> stream layout -------------------------
     if cfg.out_dtype is not None:
@@ -197,8 +240,7 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
             perm = [(d_, s_) for s_, d_ in g.perm]
             payload = _gather_rows(acc_o, snd[off:off + g.rows])
             recv = jax.lax.ppermute(payload, cp_axis, perm)
-            for i in range(g.rows):
-                o_u = _set_row(o_u, recv[i:i + 1], dst[off + i])
+            o_u = o_u.at[dst[off:off + g.rows]].set(recv)
             off += g.rows
     o = o_u[:slots].transpose(0, 2, 1, 3).reshape(tpw, hq, d)
     return o[None]
@@ -248,12 +290,16 @@ def _decode_local(q, kc, vc, lengths, *, seq_axes: tuple[str, ...],
     off = off * shard_len
     pos_k = off + jnp.arange(shard_len, dtype=jnp.int32)     # [S_l]
 
+    # decode is single-partial per shard: the fused run impls degrade to
+    # their per-step kernels here
+    impl = {"fused": "pallas", "fused_xla": "xla"}.get(cfg.impl, cfg.impl)
+
     def one(qb, kb, vb, ln):
         seg_k = jnp.where(pos_k < ln, 0, -1).astype(jnp.int32)
         o, lse = ops.block_attention(
             qb[:, None], kb.transpose(1, 0, 2), vb.transpose(1, 0, 2),
             jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
-            seg_k, pos_k, causal=False, impl=cfg.impl,
+            seg_k, pos_k, causal=False, impl=impl,
             block_q=cfg.block_q, block_k=cfg.block_k,
             interpret=cfg.interpret, xla_chunk=cfg.xla_chunk)
         return o[:, 0], lse[:, 0]                            # [HQ, D], [HQ]

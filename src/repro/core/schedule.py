@@ -18,6 +18,13 @@ into rounds of up to ``C`` sub-matchings; each round ships as few
 ``lax.ppermute`` collectives as the round's pair structure allows (one,
 when traffic is pair-concentrated), each carrying a stacked multi-block
 payload.
+
+Compute steps are grouped into **runs** (``StaticSpec.run_starts``): run
+``r`` holds the steps executed between the arrival commits of rounds
+``r-1`` and ``r``, so the fused executor issues one attention launch per
+run.  Steps are q-slot-sorted within a run (forward accumulator
+residency); the ``bwd_*`` tables hold the same steps kv-slot-sorted
+(backward dk/dv residency).
 """
 
 from __future__ import annotations
@@ -72,11 +79,22 @@ class StaticSpec:
     coalesce: int               # bottom-up coalescer degree C (>= 1)
     n_matchings: int            # Delta: congestion-free KV matchings
     n_rounds: int               # coalesced KV rounds = ceil(Delta / C)
-    n_steps: int                # compute steps (>= n_rounds when comm)
+    n_steps: int                # step-table width (sum of run widths)
     n_resh_rounds: int          # coalesced reshuffle rounds
     comm_rounds: tuple[CommRound, ...]
     resh_rounds: tuple[CommRound, ...]
     causal: bool
+    # fused-run grouping: run r holds the compute steps executed between
+    # the arrival commits of rounds r-1 and r — one fused kernel launch
+    # per run.  ``run_starts`` (len n_runs+1) offsets into the step
+    # tables; runs may be empty.  Run r < n_rounds overlaps round r's
+    # ppermute; the tail run consumes the last arrivals.
+    run_starts: tuple[int, ...] = (0, 0)
+
+    @property
+    def n_runs(self) -> int:
+        """Fused kernel launches per worker (<= n_rounds + 1)."""
+        return len(self.run_starts) - 1
 
     @property
     def kv_trash(self) -> int:         # extended-kv trash slot index
@@ -113,6 +131,11 @@ class PlanArrays:
     step_q: np.ndarray           # [N, T]  q slot (q_trash = noop)
     step_kv: np.ndarray          # [N, T]  extended kv index (kv_trash=noop)
     step_kv_blk: np.ndarray      # [N, T]  block id consumed (mask lookup)
+    # backward orderings of the same runs, sorted by kv slot so the fused
+    # dk/dv kernel visits each extended-buffer row contiguously
+    bwd_q: np.ndarray            # [N, T]  q slot, kv-sorted within runs
+    bwd_kv: np.ndarray           # [N, T]  extended kv index, kv-sorted
+    bwd_kv_blk: np.ndarray       # [N, T]  block id, kv-sorted
     sched_blk: np.ndarray        # [N, slots+1] block id per schedule slot
     blk_seg: np.ndarray          # [n_blocks+1, bs] REPLICATED
     blk_pos: np.ndarray          # [n_blocks+1, bs] REPLICATED
@@ -251,38 +274,51 @@ def make_schedule(
                              int(assignment[j]) == w))
     pairs_per_worker = np.array([len(p) for p in pairs], dtype=np.int64)
 
-    # greedy: local pairs fill early steps; a pair consuming the arrival of
-    # round r runs at step >= r + 1; prefer oldest arrivals (short live
-    # ranges for the receive buffer).
-    step_sched: list[list[tuple[int, int, bool]]] = []
-    t_max = 0
+    # run-grouped placement: run r holds the steps executed between the
+    # commits of rounds r-1 and r (one fused kernel launch per run).  A
+    # pair consuming the arrival of round r goes to run r + 1 — earliest
+    # legal, keeping receive-buffer live ranges short; local pairs fill
+    # each worker's runs evenly so the shared (static) run widths stay
+    # close to every worker's own pair count.
+    n_runs = n_rounds + 1
+    run_sched: list[list[list[tuple[int, int, bool]]]] = []
     for w in range(n_workers):
-        local = [p for p in pairs[w] if p[2]]
-        remote = sorted((p for p in pairs[w] if not p[2]),
-                        key=lambda p: arrival[(w, p[1])])
-        out: list[tuple[int, int, bool]] = []
-        li, ri, t = 0, 0, 0
-        while li < len(local) or ri < len(remote):
-            if (ri < len(remote)
-                    and arrival[(w, remote[ri][1])] + 1 <= t):
-                out.append(remote[ri])
-                ri += 1
-            elif li < len(local):
-                out.append(local[li])
-                li += 1
-            else:
-                out.append((-1, -1, True))       # stall: no-op step
-            t += 1
-        step_sched.append(out)
-        t_max = max(t_max, len(out))
-    n_steps = max(t_max, n_rounds + (1 if n_rounds else 0))
+        runs: list[list[tuple[int, int, bool]]] = [[] for _ in range(n_runs)]
+        for p in sorted((p for p in pairs[w] if not p[2]),
+                        key=lambda p: arrival[(w, p[1])]):
+            runs[arrival[(w, p[1])] + 1].append(p)
+        run_sched.append(runs)
+    # run widths are static and shared across workers (the step tables
+    # pad every worker to the widest profile), so local pairs first fill
+    # the slack under the current global widths — runs where another
+    # worker's remote bursts already set the height — and only then grow
+    # the globally-smallest run.  This keeps padding (trash steps, which
+    # cost real compute) near zero instead of letting each worker
+    # flatten its own profile obliviously.  Residual padding remains at
+    # low C (many short runs pin remote pairs to their earliest run;
+    # measured ~18% extra table width at C=1, ~0 at the default C=16) —
+    # the price of minimal receive-buffer live ranges.
+    lens = [max((len(run_sched[w][r]) for w in range(n_workers)), default=0)
+            for r in range(n_runs)]
+    for w in range(n_workers):
+        runs = run_sched[w]
+        for p in (p for p in pairs[w] if p[2]):
+            slack = [(lens[r] - len(runs[r]), -r) for r in range(n_runs)]
+            r = max(range(n_runs), key=lambda r_: slack[r_])
+            if slack[r][0] <= 0:
+                r = min(range(n_runs), key=lambda r_: (len(runs[r_]), r_))
+            runs[r].append(p)
+            lens[r] = max(lens[r], len(runs[r]))
+    run_starts = tuple(int(x) for x in np.cumsum([0] + lens))
+    n_steps = run_starts[-1]
 
     # ---- receive-buffer coloring -------------------------------------------
     last_use: dict[tuple[int, int], int] = {}
-    for w, seq in enumerate(step_sched):
-        for t, (qs, j, is_local) in enumerate(seq):
-            if not is_local:
-                last_use[(w, j)] = t
+    for w, runs in enumerate(run_sched):
+        for r, run in enumerate(runs):
+            for qs, j, is_local in run:
+                if not is_local:
+                    last_use[(w, j)] = max(last_use.get((w, j), 0), r)
     alloc = plannerlib.allocate_recv_slots(
         dict(arrivals_by_round), last_use, n_rounds, n_workers)
     ext = max(alloc.n_slots, 1 if n_rounds else 0)
@@ -298,10 +334,11 @@ def make_schedule(
         n_workers=n_workers, block_size=block_size, slots=slots,
         ext_slots=ext, coalesce=coalesce, n_matchings=n_matchings,
         n_rounds=n_rounds, n_steps=n_steps, n_resh_rounds=n_resh,
-        comm_rounds=comm_rounds, resh_rounds=resh_rounds, causal=causal)
+        comm_rounds=comm_rounds, resh_rounds=resh_rounds, causal=causal,
+        run_starts=run_starts)
 
     arrays = _build_arrays(batch, spec, assignment, stream_owner, slot_of,
-                           comm_groupings, resh_groupings, step_sched,
+                           comm_groupings, resh_groupings, run_sched,
                            alloc)
     return Schedule(batch=batch, assignment=assignment, deps=deps, spec=spec,
                     arrays=arrays, comm_edges=comm_edges,
@@ -323,7 +360,7 @@ def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
                   slot_of: np.ndarray,
                   comm_groupings: list[list[tuple]],
                   resh_groupings: list[list[tuple]],
-                  step_sched: list[list[tuple[int, int, bool]]],
+                  run_sched: list[list[list[tuple[int, int, bool]]]],
                   alloc: plannerlib.SlotAllocation) -> PlanArrays:
     N, R, T = spec.n_workers, spec.n_rounds, spec.n_steps
     R2, bs, slots = spec.n_resh_rounds, spec.block_size, spec.slots
@@ -348,16 +385,29 @@ def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
     step_q = np.full((N, max(T, 1)), q_trash, dtype=np.int32)
     step_kv = np.full((N, max(T, 1)), kv_trash, dtype=np.int32)
     step_kv_blk = np.full((N, max(T, 1)), n_blocks, dtype=np.int32)
-    for w, seq in enumerate(step_sched):
-        for t, (qs, j, is_local) in enumerate(seq):
-            if qs < 0:
-                continue
-            step_q[w, t] = qs
-            step_kv_blk[w, t] = j
-            if is_local:
-                step_kv[w, t] = slot_of[j]
-            else:
-                step_kv[w, t] = slots + alloc.slot_of_arrival[(w, j)]
+    bwd_q = np.full((N, max(T, 1)), q_trash, dtype=np.int32)
+    bwd_kv = np.full((N, max(T, 1)), kv_trash, dtype=np.int32)
+    bwd_kv_blk = np.full((N, max(T, 1)), n_blocks, dtype=np.int32)
+    for w, runs in enumerate(run_sched):
+        def ext_idx(j, is_local):
+            return (int(slot_of[j]) if is_local
+                    else slots + alloc.slot_of_arrival[(w, j)])
+        for r, run in enumerate(runs):
+            base = spec.run_starts[r]
+            # forward order: q-slot-major so the fused kernel's online-
+            # softmax accumulator stays resident across the q slot's
+            # whole KV sweep; backward order: kv-slot-major so dk/dv
+            # visit each extended-buffer row contiguously
+            fwd = sorted(run, key=lambda p: (p[0], ext_idx(p[1], p[2])))
+            bwd = sorted(run, key=lambda p: (ext_idx(p[1], p[2]), p[0]))
+            for i, (qs, j, is_local) in enumerate(fwd):
+                step_q[w, base + i] = qs
+                step_kv[w, base + i] = ext_idx(j, is_local)
+                step_kv_blk[w, base + i] = j
+            for i, (qs, j, is_local) in enumerate(bwd):
+                bwd_q[w, base + i] = qs
+                bwd_kv[w, base + i] = ext_idx(j, is_local)
+                bwd_kv_blk[w, base + i] = j
 
     # replicated per-block mask metadata (+ trash row of PADs)
     blk_seg = np.concatenate(
@@ -398,8 +448,9 @@ def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
 
     return PlanArrays(
         send_slot=send_slot, recv_slot=recv_slot, step_q=step_q,
-        step_kv=step_kv, step_kv_blk=step_kv_blk, sched_blk=sched_blk,
-        blk_seg=blk_seg, blk_pos=blk_pos,
+        step_kv=step_kv, step_kv_blk=step_kv_blk,
+        bwd_q=bwd_q, bwd_kv=bwd_kv, bwd_kv_blk=bwd_kv_blk,
+        sched_blk=sched_blk, blk_seg=blk_seg, blk_pos=blk_pos,
         resh_send_slot=resh_send, resh_dst_slot=resh_dst,
         resh_local_src=resh_local, restore_send_slot=rest_send,
         restore_dst_slot=rest_dst, restore_local_src=rest_local)

@@ -39,6 +39,8 @@ def make_fcp_attn_fn(sched: Schedule, mesh, pcfg: ParallelConfig
     tables = ex.schedule_tables(sched)
     cfg_exec = ex.ExecConfig(
         impl=pcfg.attention_impl,
+        block_q=pcfg.attn_block_q, block_k=pcfg.attn_block_k,
+        interpret=pcfg.attn_interpret,
         out_dtype="bfloat16" if pcfg.attn_out_bf16 else None)
     head_axis = pcfg.tp_axis if pcfg.tp_axis in mesh.axis_names else None
 
@@ -160,6 +162,17 @@ def main(argv=None):
                    choices=["uniform", "real_world", "less_long_tailed",
                             "bimodal"])
     p.add_argument("--block-size", type=int, default=1024)
+    p.add_argument("--attn-impl", default="xla",
+                   choices=["xla", "pallas", "fused", "fused_xla"],
+                   help="executor attention kernel: per-step (xla/pallas)"
+                        " or one fused launch per run (fused = Pallas,"
+                        " fused_xla = batched-XLA fallback)")
+    p.add_argument("--attn-block-q", type=int, default=256,
+                   help="kernel q tile (pallas/fused impls)")
+    p.add_argument("--attn-block-k", type=int, default=256,
+                   help="kernel kv tile (pallas/fused impls)")
+    p.add_argument("--attn-interpret", action="store_true",
+                   help="run pallas impls in interpret mode (CPU)")
     p.add_argument("--coalesce", type=int, default=16,
                    help="bottom-up coalescer degree C (1 = off)")
     p.add_argument("--tokens-per-worker", type=int, default=8192)
@@ -184,8 +197,14 @@ def main(argv=None):
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = apply_overrides(cfg, args.override)
+    # attention-impl selection lives in ParallelConfig so every schedule
+    # rebuild — including elastic replans — keeps the same kernel path
     pcfg = ParallelConfig(block_size=args.block_size,
-                          coalesce=args.coalesce)
+                          coalesce=args.coalesce,
+                          attention_impl=args.attn_impl,
+                          attn_block_q=args.attn_block_q,
+                          attn_block_k=args.attn_block_k,
+                          attn_interpret=args.attn_interpret)
     tcfg = TrainConfig(lr=args.lr, warmup_steps=2, total_steps=args.steps)
 
     model = Model(cfg, tp=tp)

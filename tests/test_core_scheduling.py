@@ -202,12 +202,27 @@ def _arrival_tables(sched):
     return arrival, arr_slot
 
 
+def _run_of_step(spec):
+    """step index -> fused-run index (from the static run offsets)."""
+    run_of = np.zeros(max(spec.n_steps, 1), dtype=int)
+    for r in range(spec.n_runs):
+        run_of[spec.run_starts[r]:spec.run_starts[r + 1]] = r
+    return run_of
+
+
 def _check_schedule_invariants(sched, n_workers):
     spec, arr = sched.spec, sched.arrays
     # every worker holds exactly `slots` blocks
     counts = np.bincount(sched.assignment, minlength=n_workers)
     assert (counts == spec.slots).all()
-    # every remote dependency arrives before its compute step and is not
+    # run structure: one fused launch per run, at most one run per
+    # coalesced round plus the tail
+    assert spec.n_runs <= spec.n_rounds + 1
+    assert spec.run_starts[0] == 0 and spec.run_starts[-1] == spec.n_steps
+    assert all(a <= b for a, b in zip(spec.run_starts, spec.run_starts[1:]))
+    run_of = _run_of_step(spec)
+    # every remote dependency arrives before its run (round r commits at
+    # the end of run r, so consumers sit in runs > r) and is not
     # overwritten in between (coalesced-round granularity)
     arrival, arr_slot = _arrival_tables(sched)
     for w in range(n_workers):
@@ -215,23 +230,41 @@ def _check_schedule_invariants(sched, n_workers):
             q = arr.step_q[w, t]
             if q == spec.q_trash:
                 continue
+            u = run_of[t]
             kv = arr.step_kv[w, t]
             if kv >= spec.slots and kv < spec.kv_trash:
                 j = int(arr.step_kv_blk[w, t])
                 assert (w, j) in arrival, f"worker {w} step {t}: no arrival"
                 r = arrival[(w, j)]
-                assert r < t, f"worker {w} step {t}: consumes round {r}"
+                assert r < u, f"worker {w} run {u}: consumes round {r}"
                 assert arr_slot[(w, j)] == kv, \
                     f"worker {w} step {t}: wrong slot"
                 clobbered = any(
-                    s2 == kv and r < r2 < t
+                    s2 == kv and r < r2 < u
                     for (w2, j2), s2 in arr_slot.items()
                     if w2 == w and j2 != j
                     for r2 in (arrival[(w2, j2)],))
                 assert not clobbered, f"worker {w} step {t}: stale slot"
-    # all pairs are scheduled exactly once
+    # all pairs are scheduled exactly once, and the backward (kv-sorted)
+    # tables hold the same (q, kv) multiset per worker and run
     n_sched = int(np.sum(arr.step_q != spec.q_trash))
     assert n_sched == int(sched.pairs_per_worker.sum())
+    for w in range(n_workers):
+        for r in range(spec.n_runs):
+            lo, hi = spec.run_starts[r], spec.run_starts[r + 1]
+            f = sorted(zip(arr.step_q[w, lo:hi].tolist(),
+                           arr.step_kv[w, lo:hi].tolist()))
+            b = sorted(zip(arr.bwd_q[w, lo:hi].tolist(),
+                           arr.bwd_kv[w, lo:hi].tolist()))
+            assert f == b, f"bwd tables diverge: worker {w} run {r}"
+            # forward steps are q-slot-sorted, backward kv-slot-sorted
+            fq = [q for q in arr.step_q[w, lo:hi].tolist()
+                  if q != spec.q_trash]
+            assert fq == sorted(fq)
+            bk = [kv for q, kv in zip(arr.bwd_q[w, lo:hi].tolist(),
+                                      arr.bwd_kv[w, lo:hi].tolist())
+                  if q != spec.q_trash]
+            assert bk == sorted(bk)
 
 
 def _check_coalescing_invariants(sched):

@@ -169,3 +169,119 @@ def test_chunked_equals_dense_sweep():
                                        chunk=128)
         np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_d),
                                    atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# fused schedule-driven kernels (interpret mode)
+# --------------------------------------------------------------------------
+
+def _fused_setup(rng, SL=4, H=4, KH=2, bs=128, d=32, EX=6):
+    """Executor-shaped buffers + a q-sorted run over one document stream."""
+    qs = jnp.asarray(rng.normal(size=(SL, H, bs, d)), jnp.float32)
+    kxt = jnp.asarray(rng.normal(size=(EX, KH, bs, d)), jnp.float32)
+    vxt = jnp.asarray(rng.normal(size=(EX, KH, bs, d)), jnp.float32)
+    q_seg = jnp.zeros((SL, bs), jnp.int32).at[SL - 1].set(-1)  # trash slot
+    q_pos = (jnp.arange(bs, dtype=jnp.int32)[None]
+             + jnp.arange(SL, dtype=jnp.int32)[:, None] * bs)
+    kv_seg = jnp.zeros((EX, bs), jnp.int32).at[EX - 1].set(-1)
+    kv_pos = (jnp.arange(bs, dtype=jnp.int32)[None]
+              + jnp.arange(EX, dtype=jnp.int32)[:, None] * bs)
+    # this run — slot 0: kv {0}; slot 1: kv {1}; slot 2: kv {0, 1, 2};
+    # plus a trash step.  Shared kv rows exercise the dkv revisit
+    # accumulation; slot 1 additionally carries kv row 0 in from a
+    # "previous run" through the incoming accumulator.
+    step_q = jnp.asarray([0, 1, 2, 2, 2, SL - 1], jnp.int32)
+    step_kv = jnp.asarray([0, 1, 0, 1, 2, EX - 1], jnp.int32)
+    order = np.lexsort((np.asarray(step_q), np.asarray(step_kv)))
+    tabs = dict(step_q=step_q, step_kv=step_kv, q_seg=q_seg, q_pos=q_pos,
+                k_seg=kv_seg[step_kv], k_pos=kv_pos[step_kv],
+                bwd_q=step_q[order], bwd_kv=step_kv[order],
+                k_seg_b=kv_seg[step_kv[order]],
+                k_pos_b=kv_pos[step_kv[order]])
+    acc_o = jnp.zeros((SL, H, bs, d), jnp.float32)
+    acc_lse = jnp.full((SL, H, bs), ref.NEG_INF, jnp.float32)
+    o_prev, l_prev = ref.reference_attention(
+        qs[1], kxt[0], vxt[0], q_seg[1], q_pos[1], kv_seg[0], kv_pos[0],
+        True)
+    acc_o = acc_o.at[1].set(o_prev)
+    acc_lse = acc_lse.at[1].set(l_prev)
+    return qs, kxt, vxt, tabs, acc_o, acc_lse, (q_seg, q_pos, kv_seg, kv_pos)
+
+
+@pytest.mark.parametrize("block", [64, 128])
+def test_fused_fwd_matches_reference(block):
+    """One fused launch == per-slot reference attention over the union of
+    each slot's KV blocks merged with the incoming accumulator."""
+    rng = np.random.default_rng(11)
+    qs, kxt, vxt, tabs, acc_o, acc_lse, meta = _fused_setup(rng)
+    q_seg, q_pos, kv_seg, kv_pos = meta
+    o2, l2 = ops.fused_run_attention(
+        qs, kxt, vxt, acc_o, acc_lse, tabs, causal=True, impl="pallas",
+        block_q=block, block_k=block, interpret=True)
+    consumed = {0: [0], 1: [0, 1], 2: [0, 1, 2]}     # slot -> kv rows
+    for slot, rows in consumed.items():
+        kk = jnp.concatenate([kxt[r] for r in rows], axis=1)
+        vv = jnp.concatenate([vxt[r] for r in rows], axis=1)
+        sk = jnp.concatenate([kv_seg[r] for r in rows])
+        pk = jnp.concatenate([kv_pos[r] for r in rows])
+        o_ref, lse_ref = ref.reference_attention(
+            qs[slot], kk, vv, q_seg[slot], q_pos[slot], sk, pk, True)
+        np.testing.assert_allclose(np.asarray(o2[slot]), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+        live = np.asarray(lse_ref) > -1e29
+        np.testing.assert_allclose(np.asarray(l2[slot])[live],
+                                   np.asarray(lse_ref)[live],
+                                   atol=2e-5, rtol=2e-5)
+    # untouched slots pass through unchanged (gradient path across runs)
+    np.testing.assert_array_equal(np.asarray(o2[3]), np.asarray(acc_o[3]))
+    np.testing.assert_array_equal(np.asarray(l2[3]), np.asarray(acc_lse[3]))
+
+
+def test_fused_xla_matches_pallas_fwd():
+    rng = np.random.default_rng(12)
+    qs, kxt, vxt, tabs, acc_o, acc_lse, _ = _fused_setup(rng)
+    o_x, l_x = ops.fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs,
+                                       causal=True, impl="xla")
+    o_p, l_p = ops.fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs,
+                                       causal=True, impl="pallas",
+                                       block_q=64, block_k=64,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_x), atol=2e-6)
+    live = np.asarray(l_x) > -1e29
+    np.testing.assert_allclose(np.asarray(l_p)[live], np.asarray(l_x)[live],
+                               atol=2e-6)
+
+
+def test_fused_bwd_matches_xla_autodiff():
+    """The merge-chain custom_vjp == plain autodiff of the batched XLA
+    path, on live rows (dead-row accumulator cotangents are garbage that
+    the executor discards at the zeros init)."""
+    rng = np.random.default_rng(13)
+    qs, kxt, vxt, tabs, acc_o, acc_lse, _ = _fused_setup(rng)
+    key_o = jnp.asarray(rng.normal(size=qs.shape), jnp.float32)
+    key_l = jnp.asarray(rng.normal(size=acc_lse.shape), jnp.float32)
+
+    def loss(impl):
+        def f(qs_, k_, v_, ao, al):
+            o2, l2 = ops.fused_run_attention(
+                qs_, k_, v_, ao, al, tabs, causal=True, impl=impl,
+                block_q=64, block_k=64, interpret=True)
+            return (jnp.sum(o2 * key_o)
+                    + jnp.sum(jnp.where(l2 > -1e29, l2 * key_l, 0.0)))
+        return f
+
+    args = (qs, kxt, vxt, acc_o, acc_lse)
+    g_x = jax.grad(loss("xla"), argnums=(0, 1, 2, 3, 4))(*args)
+    g_p = jax.grad(loss("pallas"), argnums=(0, 1, 2, 3, 4))(*args)
+    for a, b, name in zip(g_p[:3], g_x[:3], ["qs", "kxt", "vxt"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-6,
+                                   rtol=5e-6, err_msg=name)
+    live = np.asarray(acc_lse) > -1e29           # incoming-acc live rows
+    for a, b, name in zip(g_p[3:], g_x[3:], ["acc_o", "acc_lse"]):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.ndim > live.ndim:
+            m = np.broadcast_to(live[..., None], a.shape)
+        else:
+            m = live
+        np.testing.assert_allclose(a[m], b[m], atol=5e-6, rtol=5e-6,
+                                   err_msg=name)

@@ -37,6 +37,14 @@ def test_fcp_executor_multidevice():
     assert "ALL MULTIDEVICE EXECUTOR CASES PASSED" in out
 
 
+@pytest.mark.slow
+def test_fused_executor_multidevice():
+    # fused-vs-per-step equivalence (outputs + grads, coalesce sweep),
+    # launch accounting, and the fused Pallas path in interpret mode
+    out = _run("run_fused_executor.py", timeout=1800)
+    assert "ALL FUSED EXECUTOR CASES PASSED" in out
+
+
 def test_cp_decode_multidevice():
     out = _run("run_decode.py")
     assert "ALL MULTIDEVICE DECODE CASES PASSED" in out
