@@ -34,6 +34,8 @@ from repro.core import executor, make_schedule                  # noqa: E402
 from repro.data.distributions import batch_compositions         # noqa: E402
 from repro.kernels import ops                                   # noqa: E402
 
+from .common import calibration_ms                              # noqa: E402
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
@@ -132,6 +134,7 @@ def main(argv=None):
         "bench": "fcp_executor_fwd_bwd",
         "device": "cpu-host8",
         "dist": "real_world",
+        "calibration_ms": calibration_ms(),
         "config": {
             "n_workers": n_workers, "tokens_per_worker": tpw,
             "block_size": bs, "heads": args.heads,

@@ -13,7 +13,6 @@ Model config: Llama-3-70B attention geometry, as in the paper (§6.1):
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import blocks as bl
 from repro.core import cost_model as cm
@@ -22,6 +21,23 @@ from repro.core import policies
 N_Q_HEADS, N_KV_HEADS, HEAD_DIM = 64, 8, 128
 TOKENS_PER_WORKER = 32768
 BLOCK = 4096
+
+
+def calibration_ms(iters: int = 5) -> float:
+    """Machine-speed probe (fixed f32 matmul): lets the CI regression
+    gate (scripts/check_bench.py) normalize wall-clock metrics measured
+    on differently-sized runners.  Shared by every wall-clock benchmark
+    so executor and planner results normalize identically."""
+    import time
+
+    import numpy as np
+    a = np.random.default_rng(0).normal(size=(512, 512)).astype(np.float32)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        (a @ a).sum()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e3
 
 
 def make_workload(dist: str, n_workers: int, seed: int = 0,

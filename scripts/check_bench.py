@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: fresh BENCH_*.json vs committed baselines.
+
+Compares the freshly-generated benchmark results (``--fresh`` dir)
+against the baselines committed at the repo root (``--baseline``) and
+fails on regression:
+
+* wall-clock metrics (step time, cold-plan latency) may regress at most
+  ``--rel-tol`` (default 15%) after *calibration normalization* — each
+  benchmark records ``calibration_ms`` (a fixed numpy matmul) so a
+  slower CI runner doesn't read as a code regression;
+* dimensionless metrics (fused speedup, plan-cache hit rate, plan
+  amortization) are compared raw;
+* exact gates (executor recompiles after warmup) must not exceed the
+  baseline at all.
+
+Usage::
+
+    python scripts/check_bench.py --baseline . --fresh bench_out
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    path: str                  # dotted path into the benchmark JSON
+    lower_is_better: bool
+    normalize: bool = False    # scale by the calibration ratio
+    rel_tol: float | None = None   # override the global tolerance
+    exact: bool = False        # fail on ANY worsening (counters)
+
+
+GATES: dict[str, list[Gate]] = {
+    "BENCH_executor.json": [
+        Gate("per_step.fwd_bwd_ms", lower_is_better=True, normalize=True),
+        Gate("fused.fwd_bwd_ms", lower_is_better=True, normalize=True),
+        Gate("speedup_fused_vs_per_step", lower_is_better=False),
+    ],
+    "BENCH_planner.json": [
+        Gate("steady_state.plan_cold_ms_median", lower_is_better=True,
+             normalize=True),
+        Gate("steady_state.hit_rate", lower_is_better=False),
+        Gate("steady_state.recompiles_after_warmup", lower_is_better=True,
+             exact=True),
+        Gate("steady_state.plan_amortization_x", lower_is_better=False,
+             rel_tol=0.5),      # µs-scale denominator: generous tol
+    ],
+}
+
+
+def dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def check_file(name: str, base: dict, fresh: dict, rel_tol: float
+               ) -> list[str]:
+    failures = []
+    cal_b = base.get("calibration_ms")
+    cal_f = fresh.get("calibration_ms")
+    for g in GATES[name]:
+        b, f = dig(base, g.path), dig(fresh, g.path)
+        if b is None:
+            print(f"  {name}:{g.path}: no baseline value — skipped")
+            continue
+        if f is None:
+            failures.append(f"{name}:{g.path}: missing from fresh run")
+            continue
+        b, f = float(b), float(f)
+        shown = f
+        if g.normalize and cal_b and cal_f:
+            f = f * (float(cal_b) / float(cal_f))
+        tol = 0.0 if g.exact else (g.rel_tol if g.rel_tol is not None
+                                   else rel_tol)
+        if g.lower_is_better:
+            ok = f <= b * (1.0 + tol) + (0.0 if g.exact else 1e-12)
+            delta = (f - b) / b if b else (1.0 if f > b else 0.0)
+        else:
+            ok = f >= b * (1.0 - tol)
+            delta = (b - f) / b if b else (1.0 if f < b else 0.0)
+        tag = "OK " if ok else "FAIL"
+        norm = (f" (normalized {f:.4g})"
+                if g.normalize and cal_b and cal_f else "")
+        print(f"  [{tag}] {name}:{g.path}: baseline {b:.4g} "
+              f"fresh {shown:.4g}{norm}  "
+              f"[{'regression' if delta > 0 else 'improvement'} "
+              f"{abs(delta) * 100:.1f}%, tol {tol * 100:.0f}%]")
+        if not ok:
+            failures.append(
+                f"{name}:{g.path}: {b:.4g} -> {f:.4g} exceeds "
+                f"{tol * 100:.0f}% tolerance")
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", default=".",
+                   help="directory holding the committed BENCH_*.json")
+    p.add_argument("--fresh", default="bench_out",
+                   help="directory holding the just-generated results")
+    p.add_argument("--rel-tol", type=float, default=0.15,
+                   help="allowed relative regression (default 15%%)")
+    args = p.parse_args(argv)
+
+    base_dir = pathlib.Path(args.baseline)
+    fresh_dir = pathlib.Path(args.fresh)
+    failures: list[str] = []
+    checked = 0
+    for name in GATES:
+        bp, fp = base_dir / name, fresh_dir / name
+        if not bp.exists():
+            print(f"{name}: no committed baseline — skipped "
+                  f"(commit one from a fresh run to arm the gate)")
+            continue
+        if not fp.exists():
+            failures.append(f"{name}: baseline exists but the fresh run "
+                            f"produced no {fp}")
+            continue
+        print(f"{name}:")
+        with open(bp) as fh:
+            base = json.load(fh)
+        with open(fp) as fh:
+            fresh = json.load(fh)
+        failures += check_file(name, base, fresh, args.rel_tol)
+        checked += 1
+
+    if failures:
+        print("\nBENCHMARK REGRESSION GATE FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    if not checked:
+        print("no benchmark baselines found; nothing gated")
+    else:
+        print(f"\nbenchmark gate passed ({checked} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,60 @@
 #!/usr/bin/env bash
-# CPU CI: tier-1 test suite minus the slow multi-device executor suite.
-# Mirrors .github/workflows/ci.yml so it can run locally or on any runner.
+# Local mirror of .github/workflows/ci.yml.
+#
+#   scripts/ci.sh lint         # ruff over the whole repo
+#   scripts/ci.sh test         # fast tier-1 suite + benches + regression gate
+#   scripts/ci.sh multidevice  # slow 8-host-device subprocess suites
+#   scripts/ci.sh all          # everything, in CI job order
+#
+# Set SKIP_INSTALL=1 to reuse the current environment as-is.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-python -m pip install -e ".[dev]"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m pytest -x -q -m "not slow"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.bench_executor --quick
+job="${1:-all}"
+
+install() {
+    if [ "${SKIP_INSTALL:-0}" = "1" ]; then
+        return
+    fi
+    python -m pip install -e ".[dev]"
+}
+
+run_lint() {
+    if ! python -m ruff --version >/dev/null 2>&1; then
+        echo "ruff is not installed; run: python -m pip install ruff" >&2
+        exit 1
+    fi
+    python -m ruff check .
+}
+
+run_test() {
+    install
+    # no -x: one failure must not mask the rest (CI parity)
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -q -m "not slow"
+    mkdir -p bench_out
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.bench_executor --quick \
+        --out bench_out/BENCH_executor.json
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.bench_planner --quick \
+        --out bench_out/BENCH_planner.json
+    python scripts/check_bench.py --baseline . --fresh bench_out
+}
+
+run_multidevice() {
+    install
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -q -m slow tests/test_multidevice.py
+}
+
+case "$job" in
+    lint)         run_lint ;;
+    test)         run_test ;;
+    multidevice)  run_multidevice ;;
+    all)          run_lint; run_test; run_multidevice ;;
+    *)
+        echo "usage: scripts/ci.sh [lint|test|multidevice|all]" >&2
+        exit 2 ;;
+esac

@@ -41,7 +41,8 @@ def roofline_table(recs: list[dict], mesh: str) -> str:
             continue
         tag = f"| {r['arch']} | {r['shape']} "
         if r.get("status") != "ok":
-            rows.append(tag + f"| — | — | — | {r['status']} | — | — | — |")
+            rows.append(
+                tag + f"| — | — | — | {r['status']} | — | — | — |")
             continue
         ro = r["roofline"]
         tmax = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
@@ -102,12 +103,15 @@ def iteration_table(base: list[dict], iters: list[dict]) -> str:
                 continue
             ro = r["roofline"]
             sch = r.get("schedule") or {}
+            permute_b = ro["collective_bytes"].get("collective-permute", 0)
+            reduce_b = ro["collective_bytes"].get("all-reduce", 0)
             rows.append(
                 f"| {group[0]}×{group[1]} | {name} "
                 f"| {ro['memory_s']:.3f} | {ro['collective_s']:.4f} "
-                f"| {fmt_bytes(ro['collective_bytes'].get('collective-permute', 0))} "
-                f"| {fmt_bytes(ro['collective_bytes'].get('all-reduce', 0))} "
-                f"| {sch.get('rounds', '—')} | {sch.get('resh_rounds', '—')} |")
+                f"| {fmt_bytes(permute_b)} "
+                f"| {fmt_bytes(reduce_b)} "
+                f"| {sch.get('rounds', '—')} "
+                f"| {sch.get('resh_rounds', '—')} |")
     return "\n".join(rows)
 
 

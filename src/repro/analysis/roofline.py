@@ -18,7 +18,6 @@ import dataclasses
 import json
 import re
 
-import numpy as np
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -145,6 +145,13 @@ class ParallelConfig:
     locality: str = "auto"        # affinity-aware LPT: "auto" | on | off
     chunked_loss: bool = False    # CE without full logits (§Perf #3)
     attn_out_bf16: bool = False   # executor restores o in bf16 (§Perf #4)
+    # amortized planning (core/plan_cache.py): canonical length buckets
+    # per doubling (0 = raw lengths), LRU schedule-cache capacity, and
+    # whether batch t+1 is planned on a host thread while t executes.
+    # Elastic replans must preserve all three (runtime/elastic.replan).
+    plan_buckets: int = 0
+    plan_cache_size: int = 64
+    plan_ahead: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

@@ -167,6 +167,40 @@ def kv_dependencies(batch: BlockedBatch, causal: bool = True
     return deps
 
 
+def length_bucket_edges(min_len: int, max_len: int,
+                        per_octave: int = 1) -> list[int]:
+    """Geometric document-length bucket edges for amortized planning.
+
+    Edges run ``min_len * 2**(i / per_octave)`` from ``min_len`` up to
+    (and including one edge >=) ``max_len``, each rounded up to a
+    multiple of ``min_len`` so bucketed documents tile the block grid.
+    A small fixed edge set keeps the canonical batch layouts — and
+    therefore the schedule's static shapes — drawn from a small set.
+    """
+    if min_len <= 0:
+        raise ValueError("min_len must be positive")
+    per_octave = max(1, int(per_octave))
+    edges: list[int] = []
+    i = 0
+    while True:
+        e = min_len * 2.0 ** (i / per_octave)
+        e = int(-(-int(round(e)) // min_len) * min_len)   # round up to grid
+        if not edges or e > edges[-1]:
+            edges.append(e)
+        if e >= max_len:
+            break
+        i += 1
+    return edges
+
+
+def bucket_length(length: int, edges: Sequence[int]) -> int:
+    """Round ``length`` up to its bucket edge (clamped to the last edge)."""
+    for e in edges:
+        if length <= e:
+            return int(e)
+    return int(edges[-1])
+
+
 def zigzag_order(n_blocks: int, n_workers: int) -> np.ndarray:
     """Zig-Zag placement (paper Fig. 4): block ``i`` pairs with ``2N-1-i``.
 

@@ -270,8 +270,18 @@ def fcp_attention(q, k, v, tables: dict[str, jax.Array], *,
 def schedule_tables(sched: Schedule) -> dict[str, jax.Array]:
     """Device tables for :func:`fcp_attention`.  All mask metadata
     (including for received blocks) is precomputed host-side into the
-    step tables — only K/V bytes travel the network."""
-    return plan_tables(sched.arrays)
+    step tables — only K/V bytes travel the network.
+
+    Memoized on the schedule object: plan-cache hits (core/plan_cache.py)
+    return the same ``Schedule``, so repeated batches reuse the uploaded
+    tables (and the jit caches keyed on their shapes) instead of paying
+    a fresh host->device transfer per step.
+    """
+    tables = getattr(sched, "_device_tables", None)
+    if tables is None:
+        tables = plan_tables(sched.arrays)
+        sched._device_tables = tables
+    return tables
 
 
 # --------------------------------------------------------------------------

@@ -48,28 +48,43 @@ def _kuhn_perfect(adj: list[dict[int, int]], n: int,
                 match_src[d] = s
                 match_dst[s] = d
 
-    def try_augment(src: int, visited: list[bool]) -> bool:
-        for d in adj[src]:
-            if visited[d]:
-                continue
-            visited[d] = True
-            if match_src[d] < 0 or try_augment(match_src[d], visited):
-                match_src[d] = src
-                match_dst[src] = d
-                return True
+    def try_augment(root: int, visited: list[bool]) -> bool:
+        # iterative DFS over alternating paths (explicit stack: augmenting
+        # runs on the plan-ahead background thread, so no recursion-limit
+        # fiddling — that would be cross-thread global state)
+        path = [root]                       # srcs on the current path
+        nbrs = {root: iter(adj[root])}      # src -> remaining neighbors
+        via: dict[int, int] = {}            # src -> dst it was reached via
+        while path:
+            src = path[-1]
+            for d in nbrs[src]:
+                if visited[d]:
+                    continue
+                visited[d] = True
+                nxt = match_src[d]
+                if nxt < 0:
+                    # free dst: flip matches along the alternating path
+                    while True:
+                        match_src[d] = src
+                        match_dst[src] = d
+                        if src == root:
+                            return True
+                        d = via[src]        # dst that pulled src onto
+                        path.pop()          # the path; rematch it to
+                        src = path[-1]      # src's predecessor
+                via[nxt] = d
+                nbrs[nxt] = iter(adj[nxt])
+                path.append(nxt)
+                break
+            else:
+                path.pop()
         return False
 
-    import sys
-    old = sys.getrecursionlimit()
-    sys.setrecursionlimit(max(old, 4 * n + 100))
-    try:
-        for s in range(n):
-            if match_dst[s] < 0:
-                if not try_augment(s, [False] * n):
-                    raise RuntimeError(
-                        "no perfect matching; multigraph not regular")
-    finally:
-        sys.setrecursionlimit(old)
+    for s in range(n):
+        if match_dst[s] < 0:
+            if not try_augment(s, [False] * n):
+                raise RuntimeError(
+                    "no perfect matching; multigraph not regular")
     return match_src
 
 

@@ -110,6 +110,27 @@ class StaticSpec:
         return sum(len(r.groups) for r in self.comm_rounds)
 
     @property
+    def comm_rows(self) -> int:
+        """Payload-row axis of the KV send/recv tables (widest round)."""
+        return max(1, max((r.n_rows for r in self.comm_rounds), default=1))
+
+    @property
+    def resh_rows(self) -> int:
+        """Payload-row axis of the reshuffle/restore tables."""
+        return max(1, max((r.n_rows for r in self.resh_rounds), default=1))
+
+    @property
+    def table_dims(self) -> tuple:
+        """Every static array dimension of the executor's jit signature
+        (plan-table shapes — including the round axes of the comm and
+        reshuffle tables — plus run widths).  Schedules sharing these
+        dims and the comm structure compile once; the amortized-planning
+        length buckets (core/plan_cache.py) keep this set small."""
+        return (self.n_steps, self.n_rounds, self.comm_rows,
+                self.n_resh_rounds, self.resh_rows, self.slots,
+                self.ext_slots, self.run_starts)
+
+    @property
     def n_resh_launches(self) -> int:
         return sum(len(r.groups) for r in self.resh_rounds)
 
@@ -323,7 +344,7 @@ def make_schedule(
         dict(arrivals_by_round), last_use, n_rounds, n_workers)
     ext = max(alloc.n_slots, 1 if n_rounds else 0)
 
-    # ---- reshuffle plan ------------------------------------------------------
+    # ---- reshuffle plan ----------------------------------------------------
     resh_edges = plannerlib.build_reshuffle_edges(stream_owner, assignment)
     resh_matchings = plannerlib.decompose_matchings(resh_edges, n_workers)
     resh_windows, resh_groupings, resh_rounds = _coalesced_rounds(
@@ -349,7 +370,8 @@ def make_schedule(
                     pairs_per_worker=pairs_per_worker)
 
 
-def _block_meta(batch: BlockedBatch, bid: int) -> tuple[np.ndarray, np.ndarray]:
+def _block_meta(batch: BlockedBatch, bid: int
+                ) -> tuple[np.ndarray, np.ndarray]:
     bs = batch.block_size
     lo = bid * bs
     return (batch.seg_ids[lo:lo + bs], batch.positions[lo:lo + bs])
@@ -367,8 +389,7 @@ def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
     kv_trash, q_trash = spec.kv_trash, spec.q_trash
     # payload-row axis: concatenation of each round's group rows, padded
     # to the widest round
-    n_rows = max(1, max((r_.n_rows for r_ in spec.comm_rounds), default=1))
-    n_rows2 = max(1, max((r_.n_rows for r_ in spec.resh_rounds), default=1))
+    n_rows, n_rows2 = spec.comm_rows, spec.resh_rows
 
     send_slot = np.full((N, max(R, 1), n_rows), kv_trash, dtype=np.int32)
     recv_slot = np.full((N, max(R, 1), n_rows), kv_trash, dtype=np.int32)

@@ -44,6 +44,26 @@ def sample_lengths(dist: str, n: int, seed: int = 0,
     return np.clip(x.astype(np.int64), MIN_LEN, MAX_LEN).tolist()
 
 
+def sample_composition(dist: str, token_budget: int, seed: int = 0,
+                       uniform_len: int = 4096) -> list[int]:
+    """One length multiset filling exactly ``token_budget`` tokens."""
+    lens = sample_lengths(dist, 4 * max(1, token_budget // 4096),
+                          seed=seed, uniform_len=uniform_len)
+    chosen: list[int] = []
+    tot = 0
+    for L in lens:
+        L = min(L, token_budget - tot)
+        if L < MIN_LEN // 2:
+            break
+        chosen.append(int(L))
+        tot += L
+        if tot >= token_budget:
+            break
+    if tot < token_budget and chosen:
+        chosen[-1] += token_budget - tot           # top up the last doc
+    return chosen
+
+
 def batch_compositions(dist: str, token_budget: int, n_buckets: int,
                        seed: int = 0, uniform_len: int = 4096
                        ) -> list[list[int]]:
@@ -51,22 +71,6 @@ def batch_compositions(dist: str, token_budget: int, n_buckets: int,
     tokens.  Training reuses these compositions round-robin so each
     distinct FCP schedule compiles once (DESIGN.md §2: schedule-class
     static compilation)."""
-    out = []
-    for b in range(n_buckets):
-        rng_seed = seed * 1000 + b
-        lens = sample_lengths(dist, 4 * max(1, token_budget // 4096),
-                              seed=rng_seed, uniform_len=uniform_len)
-        chosen: list[int] = []
-        tot = 0
-        for L in lens:
-            L = min(L, token_budget - tot)
-            if L < MIN_LEN // 2:
-                break
-            chosen.append(int(L))
-            tot += L
-            if tot >= token_budget:
-                break
-        if tot < token_budget and chosen:
-            chosen[-1] += token_budget - tot       # top up the last doc
-        out.append(chosen)
-    return out
+    return [sample_composition(dist, token_budget, seed=seed * 1000 + b,
+                               uniform_len=uniform_len)
+            for b in range(n_buckets)]

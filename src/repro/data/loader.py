@@ -61,26 +61,69 @@ def _doc_tokens(rng: np.random.Generator, length: int,
 
 
 class SyntheticLoader:
-    """Packed-stream batches with a bounded set of length compositions."""
+    """Packed-stream batches with a bounded set of length compositions.
+
+    ``plan_buckets > 0`` canonicalizes every composition through the
+    amortized-planning length buckets (``plan_buckets`` bucket edges per
+    length doubling; see :mod:`repro.core.plan_cache`): long documents
+    round up to bucket edges, short ones re-pack into a deterministic
+    filler — so the batch layouts the scheduler sees are drawn from a
+    small set and the plan cache hits even on ``fresh`` streams.
+
+    ``fresh=True`` samples a new composition every step (a production
+    batch stream) instead of round-robining ``n_buckets`` precomputed
+    ones.  Compositions are a pure function of ``(seed, step)`` either
+    way, so :meth:`peek_seqlens` can reveal batch ``t+1``'s layout for
+    the plan-ahead pipeline without advancing loader state.
+    """
 
     def __init__(self, *, dist: str, n_frames: int, tokens_per_worker: int,
                  vocab_size: int, n_buckets: int = 4, seed: int = 0,
-                 uniform_len: int = 4096, pods: int = 1):
+                 uniform_len: int = 4096, pods: int = 1,
+                 plan_buckets: int = 0, bucket_min_len: int = 1024,
+                 fresh: bool = False):
         self.n_frames = n_frames            # per pod
         self.tpw = tokens_per_worker
         self.vocab = vocab_size
         self.pods = pods
-        budget = n_frames * tokens_per_worker
-        self.compositions = distributions.batch_compositions(
-            dist, budget, n_buckets, seed=seed, uniform_len=uniform_len)
+        self.dist = dist
+        self.uniform_len = uniform_len
+        self.plan_buckets = int(plan_buckets)
+        self.bucket_min_len = int(bucket_min_len)
+        self.fresh = bool(fresh)
+        self.budget = n_frames * tokens_per_worker
+        if not self.fresh:
+            self.compositions = [
+                self._canonical(c) for c in distributions.batch_compositions(
+                    dist, self.budget, n_buckets, seed=seed,
+                    uniform_len=uniform_len)]
         bank_rng = np.random.default_rng((seed, 0x5eed))
         self.pattern_bank = bank_rng.integers(
             1, max(vocab_size, 2), size=(16, 64))
         self.state = LoaderState(step=0, seed=seed)
 
+    def _canonical(self, lens: list[int]) -> list[int]:
+        if self.plan_buckets <= 0:
+            return lens
+        from ..core.plan_cache import canonicalize_lengths
+        return list(canonicalize_lengths(
+            lens, self.budget, self.bucket_min_len,
+            per_octave=self.plan_buckets))
+
     def composition(self, step: int) -> tuple[int, list[int]]:
+        if self.fresh:
+            lens = self._canonical(distributions.sample_composition(
+                self.dist, self.budget,
+                seed=self.state.seed * 1_000_003 + 7919 * step + 1,
+                uniform_len=self.uniform_len))
+            return hash(tuple(lens)) & 0x7FFFFFFF, lens
         i = step % len(self.compositions)
         return i, self.compositions[i]
+
+    def peek_seqlens(self, ahead: int = 0) -> list[int]:
+        """The ``seqlens`` of the batch ``ahead`` steps past the next
+        one, without advancing state (plan-ahead input)."""
+        return self.composition(self.state.step + ahead)[1]
 
     def next(self) -> Batch:
         step = self.state.step

@@ -310,7 +310,8 @@ def flash_attention_bwd(q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse,
             jax.ShapeDtypeStruct(k.shape, k.dtype),
             jax.ShapeDtypeStruct(v.shape, v.dtype),
         ],
-        scratch_shapes=[_vmem_scratch((block_k, d)), _vmem_scratch((block_k, d))],
+        scratch_shapes=[_vmem_scratch((block_k, d)),
+                        _vmem_scratch((block_k, d))],
         interpret=interpret,
     )(q, k, v, seg_q, pos_q, seg_k, pos_k, lse, do, delta, dlse)
 
@@ -470,7 +471,8 @@ def _fused_dq_kernel(sq_tab, skv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
                      *, scale: float, causal: bool, n_kv_tiles: int,
                      n_steps: int):
     # gradients of the whole run chain collapse onto the run-final
-    # (o, lse): ds = exp(s - L_final) ∘ (ḡ_o·v - Δ), Δ = ḡ_o·o_out - ḡ_lse
+    # (o, lse): ds = exp(s - L_final) ∘ (ḡ_o·v - Δ),
+    # with Δ = ḡ_o·o_out - ḡ_lse
     # (per q row) — the flash backward with the *merged* softmax stats.
     s = pl.program_id(2)
     kj = pl.program_id(3)

@@ -21,7 +21,6 @@ os.environ["XLA_FLAGS"] = (
 
 # ruff: noqa: E402
 import argparse
-import json
 import pathlib
 import time
 import traceback

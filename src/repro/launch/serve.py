@@ -29,10 +29,10 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from ..configs.base import (ModelConfig, ParallelConfig, apply_overrides,
+from ..configs.base import (ModelConfig, apply_overrides,
                             get_config, smoke_config)
 from ..core import executor as ex
-from ..models import Model, dense_attn_fn
+from ..models import Model
 from ..models import hybrid as hybridlib
 from ..models import ssm as ssmlib
 from ..models import transformer as tflib

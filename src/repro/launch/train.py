@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import (ModelConfig, ParallelConfig, TrainConfig,
                             apply_overrides, get_config, smoke_config)
 from ..core import executor as ex
+from ..core import plan_cache as pc
 from ..core.schedule import Schedule, make_schedule
 from ..data.loader import Batch, SyntheticLoader
 from ..models import Model, dense_attn_fn
@@ -63,6 +64,18 @@ def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
         coalesce=pcfg.coalesce,
         locality={"auto": "auto", "on": True, "off": False}.get(
             str(pcfg.locality), pcfg.locality))
+
+
+def schedule_plan_key(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
+                      n_cp: int, tokens_per_worker: int,
+                      speeds: np.ndarray | None = None) -> tuple:
+    """Plan-cache key matching :func:`build_schedule`'s determinism."""
+    nh, nkv = cfg.padded_heads(1)
+    return pc.plan_key(
+        seqlens, n_cp, tokens_per_worker, pcfg.block_size,
+        causal=True, coalesce=pcfg.coalesce, locality=pcfg.locality,
+        speeds=speeds, extra=(max(nh, 1), max(nkv, 1),
+                              max(cfg.head_dim, 1)))
 
 
 @dataclasses.dataclass
@@ -175,6 +188,18 @@ def main(argv=None):
                    help="run pallas impls in interpret mode (CPU)")
     p.add_argument("--coalesce", type=int, default=16,
                    help="bottom-up coalescer degree C (1 = off)")
+    p.add_argument("--plan-buckets", type=int, default=0,
+                   help="canonical length-bucket edges per doubling"
+                        " (0 = raw lengths; >0 bounds the schedule-key"
+                        " space so the plan cache hits on fresh streams)")
+    p.add_argument("--plan-cache-size", type=int, default=64,
+                   help="LRU capacity of the schedule/plan cache")
+    p.add_argument("--plan-ahead", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="plan batch t+1 on a host thread while t runs")
+    p.add_argument("--fresh-stream", action="store_true",
+                   help="sample a new composition every step instead of"
+                        " round-robining the loader's bounded set")
     p.add_argument("--tokens-per-worker", type=int, default=8192)
     p.add_argument("--lr", type=float, default=3e-4)
     p.add_argument("--override", action="append", default=[])
@@ -204,18 +229,38 @@ def main(argv=None):
                           attention_impl=args.attn_impl,
                           attn_block_q=args.attn_block_q,
                           attn_block_k=args.attn_block_k,
-                          attn_interpret=args.attn_interpret)
+                          attn_interpret=args.attn_interpret,
+                          plan_buckets=args.plan_buckets,
+                          plan_cache_size=args.plan_cache_size,
+                          plan_ahead=args.plan_ahead)
     tcfg = TrainConfig(lr=args.lr, warmup_steps=2, total_steps=args.steps)
 
     model = Model(cfg, tp=tp)
     loader = SyntheticLoader(
-        dist=args.dist, n_frames=n_cp, tokens_per_worker=args.tokens_per_worker,
-        vocab_size=cfg.vocab_size, pods=pods, seed=tcfg.seed)
+        dist=args.dist, n_frames=n_cp,
+        tokens_per_worker=args.tokens_per_worker,
+        vocab_size=cfg.vocab_size, pods=pods, seed=tcfg.seed,
+        plan_buckets=pcfg.plan_buckets, bucket_min_len=pcfg.block_size,
+        fresh=args.fresh_stream)
 
     params = model.init(jax.random.key(tcfg.seed))
     opt = adamw.init(params)
     residual = (compression.init_residuals(params)
                 if tcfg.grad_compression else None)
+
+    # amortized planning: repeated canonical layouts skip the planner
+    # (plan cache) and the jitted step cache (keyed on the same key), and
+    # batch t+1 is planned on a host thread while batch t executes
+    plan_cache = pc.PlanCache(pcfg.plan_cache_size)
+    planner = pc.PlanAheadPlanner(plan_cache, enabled=pcfg.plan_ahead)
+    fcp = cfg.uses_attention and n_cp > 1
+
+    def plan_of(seqlens):
+        key = schedule_plan_key(cfg, pcfg, seqlens, n_cp,
+                                args.tokens_per_worker)
+        build = functools.partial(build_schedule, cfg, pcfg, seqlens,
+                                  n_cp, args.tokens_per_worker)
+        return key, build
 
     step_cache: dict = {}
     mgr = None
@@ -227,19 +272,28 @@ def main(argv=None):
     for step in range(args.steps):
         b = loader.next()
         batch = batch_arrays(b, cfg)
-        key = b.composition_id
+        if fcp:
+            key, build = plan_of(b.seqlens)
+            sched = planner.get(key, build)
+            if step + 1 < args.steps:
+                # plan batch t+1 while this step compiles/executes
+                planner.prefetch(*plan_of(loader.peek_seqlens()))
+        else:
+            key, sched = b.composition_id, None
         if key not in step_cache:
-            if cfg.uses_attention:
-                sched = build_schedule(cfg, pcfg, b.seqlens, n_cp,
-                                       args.tokens_per_worker)
-                attn = make_fcp_attn_fn(sched, mesh, pcfg) if n_cp > 1 \
-                    else dense_attn_fn(jnp.asarray(b.seg_ids),
-                                       batch["positions"])
-            else:
+            if not cfg.uses_attention:
                 attn = None
+            elif fcp:
+                attn = make_fcp_attn_fn(sched, mesh, pcfg)
+            else:
+                attn = dense_attn_fn(jnp.asarray(b.seg_ids),
+                                     batch["positions"])
             ts = build_train_step(model, mesh, pcfg, tcfg, attn)
             step_cache[key] = jit_train_step(
                 ts, mesh, params, opt, residual, batch)
+            while len(step_cache) > max(pcfg.plan_cache_size, 1):
+                # bound compiled-step retention like the plan cache
+                step_cache.pop(next(iter(step_cache)))
         params, opt, residual, loss, gnorm = step_cache[key](
             params, opt, residual, batch)
         if step % args.log_every == 0:
@@ -250,8 +304,15 @@ def main(argv=None):
             mgr.save(step, {"params": params, "opt": opt},
                      extra={"loader": loader.state.to_dict()},
                      blocking=False)
+    planner.shutdown()
     if mgr:
         mgr.wait()
+    if fcp:
+        s = plan_cache.stats
+        print(f"plan cache: {s.hits} hits / {s.misses} misses "
+              f"(hit rate {s.hit_rate:.2f}), "
+              f"{plan_cache.n_unique_specs} static specs, "
+              f"{planner.prefetched_hits} plan-ahead builds consumed")
     print("done.")
 
 

@@ -21,6 +21,7 @@ from typing import Sequence
 import numpy as np
 
 from ..configs.base import ParallelConfig
+from ..core import plan_cache as pc
 from ..core.schedule import Schedule, make_schedule
 
 # replanned schedules keep the configured coalescing by default — an
@@ -31,17 +32,42 @@ _DEFAULT_COALESCE = ParallelConfig().coalesce
 def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            *, n_q_heads: int, n_kv_heads: int, head_dim: int,
            causal: bool = True, coalesce: int = _DEFAULT_COALESCE,
-           speeds: np.ndarray | None = None) -> Schedule:
+           speeds: np.ndarray | None = None,
+           pcfg: ParallelConfig | None = None,
+           cache: pc.PlanCache | None = None) -> Schedule:
     """Rebuild the FCP schedule for a new worker count.
 
     tokens_per_worker grows/shrinks to keep the global token budget; the
-    caller re-shards the batch into the new frame geometry."""
+    caller re-shards the batch into the new frame geometry.
+
+    ``pcfg`` (when given) carries the planning knobs across the resize —
+    coalescing survives here, and the amortized-planning settings
+    (``plan_buckets``, ``plan_cache_size``, ``plan_ahead``) ride along
+    for the caller's rebuilt loader + plan-ahead pipeline, so an elastic
+    event doesn't silently fall back to per-batch cold planning.  The
+    in-flight batch keeps its *existing* (already canonical, if the
+    loader bucketed it) ``seqlens`` — re-bucketing mid-flight would
+    desync the schedule from the generated data.  ``cache`` lets the
+    caller keep a live :class:`PlanCache` across the resize; the new
+    worker count changes every key, so old entries never collide, and a
+    re-grown fleet re-hits its pre-shrink plans.
+    """
+    if pcfg is not None:
+        coalesce = pcfg.coalesce
     total = int(sum(seqlens))
     tpw = -(-total // (new_n_workers * block_size)) * block_size
-    return make_schedule(seqlens, new_n_workers, tpw, block_size,
-                         n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
-                         head_dim=head_dim, causal=causal,
-                         coalesce=coalesce, speeds=speeds)
+
+    def build() -> Schedule:
+        return make_schedule(seqlens, new_n_workers, tpw, block_size,
+                             n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
+                             head_dim=head_dim, causal=causal,
+                             coalesce=coalesce, speeds=speeds)
+
+    if cache is None:
+        return build()
+    key = pc.plan_key(seqlens, new_n_workers, tpw, block_size,
+                      causal=causal, coalesce=coalesce, speeds=speeds)
+    return cache.get_or_build(key, build)
 
 
 def reshape_frames(arr: np.ndarray, new_n_workers: int) -> np.ndarray:

@@ -131,6 +131,68 @@ def test_lpt_speed_awareness():
     assert norm.max() / norm.min() < 1.35
 
 
+def test_locality_tie_break_settles_uniform_blocks():
+    """With identical blocks every tie resolves toward the hint: the
+    refined assignment is exactly the incoming (stream) layout."""
+    k, n_workers = 32, 4
+    compute = np.full(k, 3.0)
+    memory = np.full(k, 1.0)
+    hint = (np.arange(k) % n_workers).astype(np.int32)
+    r = dist.assign_blocks(compute, memory, n_workers,
+                           mem_limit=float(k // n_workers), delta=0.0,
+                           locality_hint=hint)
+    assert (r.owner == hint).all()
+
+
+@given(st.integers(2, 8), st.integers(0, 200), st.integers(2, 6))
+@settings(max_examples=40, deadline=None)
+def test_lpt_speed_aware_property(n_workers, seed, slots):
+    """Speed-aware LPT: normalized (per-speed) loads stay balanced and
+    the slowest worker never receives more raw compute than the
+    fastest."""
+    rng = np.random.default_rng(seed)
+    k = n_workers * slots * 4
+    compute = rng.uniform(1, 10, size=k)
+    memory = np.zeros(k)
+    speeds = rng.uniform(0.25, 1.0, size=n_workers)
+    r = dist.assign_blocks(compute, memory, n_workers, mem_limit=1e18,
+                           speeds=speeds)
+    raw = np.bincount(r.owner, weights=compute, minlength=n_workers)
+    norm = raw / speeds
+    # normalized imbalance bounded like plain LPT's (4/3 OPT + one block)
+    assert norm.max() <= (4 / 3) * norm.mean() + compute.max() / \
+        speeds.min() + 1e-9
+    slow, fast = int(np.argmin(speeds)), int(np.argmax(speeds))
+    assert raw[slow] <= raw[fast] + compute.max() + 1e-9
+
+
+@given(st.integers(2, 8), st.integers(0, 200), st.integers(2, 6))
+@settings(max_examples=40, deadline=None)
+def test_locality_tie_break_property(n_workers, seed, slots):
+    """Locality refinement: never increases block movement, preserves
+    per-worker block counts (memory layout), and drifts per-worker
+    compute by at most the documented tolerance."""
+    rng = np.random.default_rng(seed)
+    k = n_workers * slots
+    compute = rng.uniform(1, 10, size=k)
+    memory = np.full(k, 1.0)
+    hint = rng.integers(0, n_workers, size=k).astype(np.int32)
+    base = dist.assign_blocks(compute, memory, n_workers,
+                              mem_limit=float(slots), delta=0.0)
+    loc = dist.assign_blocks(compute, memory, n_workers,
+                             mem_limit=float(slots), delta=0.0,
+                             locality_hint=hint)
+    counts_base = np.bincount(base.owner, minlength=n_workers)
+    counts_loc = np.bincount(loc.owner, minlength=n_workers)
+    assert (counts_loc == counts_base).all()        # swaps only
+    moved_base = int(np.sum(base.owner != hint))
+    moved_loc = int(np.sum(loc.owner != hint))
+    assert moved_loc <= moved_base
+    tol = 0.05 * compute.sum() / n_workers
+    drift = np.abs(loc.worker_comp - base.worker_comp)
+    assert drift.max() <= tol + 1e-9
+
+
 @given(st.integers(2, 16), st.integers(10, 120), st.integers(2, 10))
 @settings(max_examples=40, deadline=None)
 def test_lpt_property_exact_fill(n_workers, seed, slots):

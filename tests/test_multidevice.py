@@ -48,3 +48,11 @@ def test_fused_executor_multidevice():
 def test_cp_decode_multidevice():
     out = _run("run_decode.py")
     assert "ALL MULTIDEVICE DECODE CASES PASSED" in out
+
+
+@pytest.mark.slow
+def test_plan_cache_executor_multidevice():
+    # amortized planning: cached-vs-uncached executor equivalence
+    # (outputs + grads <= 1e-6), >= warmup hit rate, zero recompiles
+    out = _run("run_plan_cache.py", timeout=1800)
+    assert "ALL PLAN CACHE EXECUTOR CASES PASSED" in out

@@ -1,0 +1,254 @@
+"""Amortized planning: canonicalization, plan-cache hit/miss/eviction
+invariants, plan-ahead pipeline, and the steady-state hit-rate /
+bounded-static-spec acceptance criteria."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # minimal install: skip @given only
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import plan_cache as pc
+from repro.core.blocks import bucket_length, length_bucket_edges
+from repro.core.schedule import make_schedule
+from repro.data.distributions import sample_composition
+from repro.data.loader import SyntheticLoader
+
+
+def _small_schedule(seqlens, n_workers=2, tpw=2048, bs=1024, coalesce=2):
+    return make_schedule(seqlens, n_workers, tpw, bs, n_q_heads=2,
+                         n_kv_heads=2, head_dim=32, coalesce=coalesce)
+
+
+def _key(seqlens, n_workers=2, tpw=2048, bs=1024, coalesce=2):
+    return pc.plan_key(seqlens, n_workers, tpw, bs, coalesce=coalesce)
+
+
+# --------------------------------------------------------------------------
+# length buckets + canonicalization
+# --------------------------------------------------------------------------
+
+def test_bucket_edges_geometric_and_grid_aligned():
+    edges = length_bucket_edges(1024, 65536, per_octave=1)
+    assert edges[0] == 1024 and edges[-1] >= 65536
+    assert all(e % 1024 == 0 for e in edges)
+    assert all(b == 2 * a for a, b in zip(edges, edges[1:]))
+    # finer resolution strictly grows the edge set
+    assert len(length_bucket_edges(1024, 65536, per_octave=2)) > len(edges)
+
+
+def test_bucket_length_rounds_up():
+    edges = length_bucket_edges(1024, 16384)
+    assert bucket_length(1, edges) == 1024
+    assert bucket_length(1024, edges) == 1024
+    assert bucket_length(1025, edges) == 2048
+    assert bucket_length(10 ** 9, edges) == edges[-1]
+
+
+def test_canonicalize_budget_exact_and_sorted():
+    canon = pc.canonicalize_lengths([5000, 300, 12000, 777], 16384, 1024)
+    assert sum(canon) == 16384
+    assert list(canon) == sorted(canon, reverse=True)
+
+
+def test_canonicalize_deterministic_and_idempotent():
+    lens = [9000, 4100, 2000, 50, 50, 1200]
+    a = pc.canonicalize_lengths(lens, 32768, 1024)
+    b = pc.canonicalize_lengths(list(lens), 32768, 1024)
+    assert a == b
+    assert pc.canonicalize_lengths(a, 32768, 1024) == a
+
+
+def test_canonicalize_collapses_fungible_short_docs():
+    """Batches differing only in short-document detail share a key."""
+    a = pc.canonicalize_lengths([20000, 700, 300, 500, 1000], 32768, 1024)
+    b = pc.canonicalize_lengths([20000, 999, 201, 800, 500], 32768, 1024)
+    assert a == b
+
+
+def test_canonicalize_keeps_long_docs_bucketed():
+    canon = pc.canonicalize_lengths([20000, 5000, 7768], 32768, 1024)
+    # every kept long document sits exactly on a geometric bucket edge
+    edges = set(length_bucket_edges(1024, 32768))
+    longs = [L for L in canon if L >= pc.LONG_DOC_FACTOR * 1024]
+    assert longs and all(L in edges for L in longs)
+
+
+def test_canonicalize_bounds_fresh_stream_key_space():
+    """>= 50 fresh real_world batches collapse to a small canonical set
+    (the length-bucketed static-spec guarantee)."""
+    budget = 8 * 8192
+    raw_keys, canon_keys = set(), set()
+    for step in range(50):
+        raw = sample_composition("real_world", budget, seed=1 + 7919 * step)
+        raw_keys.add(tuple(raw))
+        canon_keys.add(pc.canonicalize_lengths(raw, budget, 1024))
+    assert len(raw_keys) == 50               # every raw batch is fresh
+    assert len(canon_keys) <= 12             # canonical space is tiny
+
+
+@given(st.lists(st.integers(1, 60000), min_size=0, max_size=20),
+       st.sampled_from([8192, 16384, 65536]),
+       st.sampled_from([1, 2]))
+@settings(max_examples=60, deadline=None)
+def test_canonicalize_property(lens, budget, per_octave):
+    canon = pc.canonicalize_lengths(lens, budget, 1024,
+                                    per_octave=per_octave)
+    assert sum(canon) == budget
+    assert all(L >= 1 for L in canon)
+    assert list(canon) == sorted(canon, reverse=True)
+    # at most one non-edge document below min_len (the exact tail)
+    assert sum(1 for L in canon if L < 1024) <= 1
+
+
+# --------------------------------------------------------------------------
+# PlanCache invariants
+# --------------------------------------------------------------------------
+
+def test_plan_cache_hit_miss_counting():
+    cache = pc.PlanCache(max_size=4)
+    builds = []
+
+    def build(lens):
+        s = _small_schedule(lens)
+        builds.append(lens)
+        return s
+
+    k = _key([2048, 2048])
+    s1 = cache.get_or_build(k, lambda: build((2048, 2048)))
+    s2 = cache.get_or_build(k, lambda: build((2048, 2048)))
+    assert s1 is s2                          # hit returns the same object
+    assert len(builds) == 1                  # planner ran once
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    assert cache.stats.hit_rate == pytest.approx(1 / 2)
+
+
+def test_plan_cache_lru_eviction_order():
+    cache = pc.PlanCache(max_size=2)
+    ka, kb, kc = (_key([L, 4096 - L]) for L in (1024, 2048, 3072))
+    sa = cache.get_or_build(ka, lambda: _small_schedule([1024, 3072]))
+    cache.get_or_build(kb, lambda: _small_schedule([2048, 2048]))
+    # touch A so B is the LRU victim when C arrives
+    assert cache.get_or_build(ka, lambda: _small_schedule([1024, 3072])) \
+        is sa
+    cache.get_or_build(kc, lambda: _small_schedule([3072, 1024]))
+    assert cache.stats.evictions == 1
+    assert ka in cache and kc in cache and kb not in cache
+    assert len(cache) == 2                   # never exceeds max_size
+
+
+def test_plan_cache_spec_interning():
+    """Equal StaticSpecs across entries collapse to one object, so the
+    executor's jit static argument repeats by identity too."""
+    cache = pc.PlanCache(max_size=8)
+    s1 = cache.get_or_build(_key([4096]), lambda: _small_schedule([4096]))
+    s2 = cache.get_or_build(_key([2048, 2048]),
+                            lambda: _small_schedule([2048, 2048]))
+    if s1.spec == s2.spec:
+        assert s1.spec is s2.spec
+    assert cache.n_unique_specs <= 2
+
+
+def test_plan_cache_rejects_bad_size():
+    with pytest.raises(ValueError):
+        pc.PlanCache(max_size=0)
+
+
+def test_plan_ahead_prefetch_then_get():
+    cache = pc.PlanCache(max_size=4)
+    planner = pc.PlanAheadPlanner(cache, enabled=True)
+    try:
+        k = _key([4096])
+        planner.prefetch(k, lambda: _small_schedule([4096]))
+        sched = planner.get(k, lambda: _small_schedule([4096]))
+        assert sched is cache.lookup(k)
+        assert planner.prefetched_hits == 1
+        # a second get is a plain cache hit (no pending future)
+        assert planner.get(k, lambda: _small_schedule([4096])) is sched
+    finally:
+        planner.shutdown()
+
+
+def test_plan_ahead_propagates_builder_errors():
+    cache = pc.PlanCache(max_size=4)
+    planner = pc.PlanAheadPlanner(cache, enabled=True)
+    try:
+        k = _key([1, 2, 3])
+
+        def boom():
+            raise RuntimeError("planner exploded")
+
+        planner.prefetch(k, boom)
+        with pytest.raises(RuntimeError, match="planner exploded"):
+            planner.get(k, boom)
+        # the failure is not cached: a working builder recovers
+        sched = planner.get(k, lambda: _small_schedule([4096]))
+        assert sched is not None
+    finally:
+        planner.shutdown()
+
+
+def test_plan_ahead_disabled_is_synchronous():
+    cache = pc.PlanCache(max_size=4)
+    planner = pc.PlanAheadPlanner(cache, enabled=False)
+    k = _key([4096])
+    planner.prefetch(k, lambda: _small_schedule([4096]))   # no-op
+    assert k not in cache
+    assert planner.get(k, lambda: _small_schedule([4096])) is not None
+    planner.shutdown()
+
+
+# --------------------------------------------------------------------------
+# steady-state acceptance: >= 90% hit rate, bounded static specs
+# --------------------------------------------------------------------------
+
+def test_steady_state_stream_hit_rate_and_bounded_specs():
+    """>= 50 mixed-length batches from data/distributions.py reach >= 90%
+    plan-cache hit rate, and no new plans (hence no executor
+    recompilations) appear after warmup."""
+    n_workers, tpw, bs = 4, 2048, 1024
+    loader = SyntheticLoader(dist="real_world", n_frames=n_workers,
+                             tokens_per_worker=tpw, vocab_size=128,
+                             n_buckets=4, seed=3, plan_buckets=1,
+                             bucket_min_len=bs)
+    cache = pc.PlanCache(max_size=16)
+    warmup_keys = None
+    for step in range(50):
+        lens = loader.next().seqlens
+        key = pc.plan_key(lens, n_workers, tpw, bs, coalesce=2)
+        cache.get_or_build(
+            key, lambda lens=lens: _small_schedule(
+                lens, n_workers, tpw, bs))
+        if step == 7:                        # two full round-robin cycles
+            warmup_keys = set(cache.keys())
+    assert cache.stats.hit_rate >= 0.9
+    assert set(cache.keys()) == warmup_keys  # zero post-warmup cold plans
+    assert cache.stats.evictions == 0
+    assert cache.n_unique_specs <= 4
+
+
+def test_loader_peek_matches_next_and_fresh_mode():
+    loader = SyntheticLoader(dist="real_world", n_frames=2,
+                             tokens_per_worker=4096, vocab_size=64,
+                             seed=5, plan_buckets=1, bucket_min_len=1024,
+                             fresh=True)
+    for _ in range(5):
+        peeked = loader.peek_seqlens()
+        b = loader.next()
+        assert peeked == b.seqlens           # plan-ahead sees t+1 exactly
+        assert sum(b.seqlens) == 2 * 4096
+    # fresh mode varies compositions; bucketing keeps them canonical
+    cids = {loader.next().composition_id for _ in range(20)}
+    assert len(cids) >= 2
+
+
+def test_loader_bucketed_batches_are_learnable_shape():
+    """Bucketed compositions still produce well-formed token streams."""
+    loader = SyntheticLoader(dist="bimodal", n_frames=2,
+                             tokens_per_worker=8192, vocab_size=64,
+                             seed=1, plan_buckets=1, bucket_min_len=1024)
+    b = loader.next()
+    assert b.tokens.shape == (2, 8192)
+    assert (b.seg_ids >= 0).all()            # budget-exact: no pad tail
+    assert b.loss_mask.sum() > 0

@@ -2,7 +2,6 @@
 elastic replan, gradient compression, data pipeline."""
 
 import os
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -192,6 +191,31 @@ def test_elastic_reshape_frames_preserves_tokens():
     out = elastic.reshape_frames(arr, 3)
     assert out.shape == (3, 8)
     np.testing.assert_array_equal(out.reshape(-1)[:24], arr.reshape(-1))
+
+
+def test_elastic_replan_preserves_plan_knobs_and_reuses_cache():
+    """A resize keeps the configured coalescing (via pcfg) and a live
+    plan cache serves repeat replans without collisions across worker
+    counts."""
+    from repro.configs.base import ParallelConfig
+    from repro.core import plan_cache as pc
+
+    pcfg = ParallelConfig(coalesce=3, plan_buckets=1, plan_cache_size=8,
+                          plan_ahead=False)
+    cache = pc.PlanCache(max_size=pcfg.plan_cache_size)
+    seqlens = [6000, 1500, 700]
+    s4 = elastic.replan(seqlens, 4, 1024, n_q_heads=4, n_kv_heads=2,
+                        head_dim=64, pcfg=pcfg, cache=cache)
+    assert s4.spec.coalesce == 3            # knob survived the resize
+    s2 = elastic.replan(seqlens, 2, 1024, n_q_heads=4, n_kv_heads=2,
+                        head_dim=64, pcfg=pcfg, cache=cache)
+    assert s2.spec.n_workers == 2 and s2 is not s4
+    assert cache.stats.misses == 2          # distinct keys per fleet size
+    # growing back re-hits the pre-shrink plan
+    again = elastic.replan(seqlens, 4, 1024, n_q_heads=4, n_kv_heads=2,
+                           head_dim=64, pcfg=pcfg, cache=cache)
+    assert again is s4
+    assert cache.stats.hits == 1
 
 
 # --------------------------------------------------------------------------
