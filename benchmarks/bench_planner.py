@@ -81,7 +81,7 @@ def steady_state(args) -> dict:
 
     def build(lens):
         return make_schedule(lens, N_WORKERS, tpw, bs, n_q_heads=HQ,
-                             n_kv_heads=KH, head_dim=D, causal=True,
+                             n_kv_heads=KH, head_dim=D, mask=True,
                              coalesce=args.coalesce)
 
     def key_of(lens):
@@ -192,7 +192,7 @@ def fresh_stream(args) -> dict:
 
     def build(lens):
         return make_schedule(lens, N_WORKERS, tpw, bs, n_q_heads=HQ,
-                             n_kv_heads=KH, head_dim=D, causal=True,
+                             n_kv_heads=KH, head_dim=D, mask=True,
                              coalesce=args.coalesce)
 
     for step in range(args.batches):

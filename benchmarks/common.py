@@ -48,7 +48,7 @@ def make_workload(dist: str, n_workers: int, seed: int = 0,
     comp = distributions.batch_compositions(dist, budget, 1, seed=seed,
                                             uniform_len=uniform_len)[0]
     batch = bl.shard_stream(comp, block, budget)
-    deps = bl.kv_dependencies(batch, causal=True)
+    deps = bl.kv_dependencies(batch, mask=True)
     return batch, deps
 
 
@@ -75,7 +75,7 @@ def simulate(batch, assignment, deps, n_workers, hw=cm.GPU_X,
              flags=cm.SimFlags(), backward=False):
     return cm.simulate_attention_module(
         batch, assignment, deps, n_workers, hw, N_Q_HEADS, N_KV_HEADS,
-        HEAD_DIM, causal=True, flags=flags, backward=backward)
+        HEAD_DIM, mask=True, flags=flags, backward=backward)
 
 
 def single_worker_mfu(hw=cm.GPU_X, block=BLOCK) -> float:

@@ -42,6 +42,16 @@ GATES: dict[str, list[Gate]] = {
         Gate("per_step.fwd_bwd_ms", lower_is_better=True, normalize=True),
         Gate("fused.fwd_bwd_ms", lower_is_better=True, normalize=True),
         Gate("speedup_fused_vs_per_step", lower_is_better=False),
+        # mask-aware scheduling: the sliding-window comm bytes on the
+        # 128K-doc batch are deterministic host planning — any growth
+        # means the dependency pruning regressed (exact gate on the
+        # absolute swa bytes, so causal-side improvements can't trip
+        # it), and the windowed step time is wall-clock-gated like the
+        # others
+        Gate("swa_vs_causal.comm_bytes_swa", lower_is_better=True,
+             exact=True),
+        Gate("swa_vs_causal.swa.fwd_bwd_ms", lower_is_better=True,
+             normalize=True),
     ],
     "BENCH_planner.json": [
         Gate("steady_state.plan_cold_ms_median", lower_is_better=True,

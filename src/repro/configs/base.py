@@ -42,6 +42,12 @@ class ModelConfig:
     ssm_chunk: int = 256
     # hybrid (zamba2-style shared attention)
     attn_every: int = 0            # 0 = pure; else shared attn period
+    # per-layer attention-mask pattern (Mistral/Gemma-style interleaving):
+    # mask-spec strings ("causal" | "full" | "swa:W" | "chunked:C"),
+    # cycled over the layer stack.  Empty = every layer uses the run-wide
+    # mask (ParallelConfig.attn_mask / --attn-mask).  Each distinct mask
+    # gets its own FCP schedule (per-layer-group scheduling).
+    attn_mask_pattern: tuple = ()
     # multimodal frontend stub
     frontend: str | None = None    # "encodec" | "vit"
     frontend_dim: int = 0          # precomputed embedding width
@@ -142,6 +148,9 @@ class ParallelConfig:
     attn_block_q: int = 256       # fused/pallas kernel q tile
     attn_block_k: int = 256       # fused/pallas kernel kv tile
     attn_interpret: bool = False  # pallas interpret mode (CPU testing)
+    # run-wide attention-mask family ("causal" | "full" | "swa:W" |
+    # "chunked:C"); models with a per-layer attn_mask_pattern override it
+    attn_mask: str = "causal"
     locality: str = "auto"        # affinity-aware LPT: "auto" | on | off
     chunked_loss: bool = False    # CE without full logits (§Perf #3)
     attn_out_bf16: bool = False   # executor restores o in bf16 (§Perf #4)

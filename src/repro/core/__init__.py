@@ -1,5 +1,7 @@
 """FCP core: block-wise context-parallel scheduling and execution."""
 
+from ..masks import (CAUSAL, FULL, MaskSpec, chunked, coerce_mask,
+                     parse_mask, sliding_window)
 from .blocks import (Block, BlockedBatch, Segment, kv_dependencies,
                      shard_stream, zigzag_order)
 from .cost_model import (GPU_X, GPU_Y, HARDWARE, TPU_V5E, HardwareProfile,
@@ -21,4 +23,6 @@ __all__ = [
     "build_reshuffle_edges", "coalesce_matchings", "decompose_matchings",
     "group_coalesced_round", "verify_matchings", "CommGroup", "CommRound",
     "PlanArrays", "Schedule", "StaticSpec", "make_schedule",
+    "CAUSAL", "FULL", "MaskSpec", "chunked", "coerce_mask", "parse_mask",
+    "sliding_window",
 ]

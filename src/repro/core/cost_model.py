@@ -6,8 +6,9 @@ Provides
   reproducing the paper-side figures),
 * the kernel-efficiency curve ``f(B)`` (paper Fig. 3): small blocks cannot
   saturate the matrix units,
-* exact valid-pair counting for (q-block, kv-block) pairs under
-  causal/non-causal masks with packed varlen segments,
+* exact valid-pair counting for (q-block, kv-block) pairs under every
+  :class:`~repro.masks.MaskSpec` family (causal / sliding-window /
+  chunked / full) with packed varlen segments,
 * the end-to-end analytic timing model ``T = max_i eta_i * Comp(w_i)``
   (§3.3), with toggles for each of the paper's ablation components
   (Table 2): block-level pipelining, congestion-free solver, bottom-up
@@ -27,6 +28,7 @@ from typing import Sequence
 
 import numpy as np
 
+from ..masks import MaskSpec, coerce_mask
 from .blocks import PAD_SEGMENT, Block, BlockedBatch
 
 
@@ -96,7 +98,7 @@ def kernel_efficiency(tokens: float, knee: float = 2048.0) -> float:
 
 
 # --------------------------------------------------------------------------
-# exact pair counting (packed varlen, causal / non-causal)
+# exact pair counting (packed varlen, all MaskSpec families)
 # --------------------------------------------------------------------------
 
 def _causal_pairs(a0: int, a1: int, b0: int, b1: int) -> int:
@@ -105,6 +107,8 @@ def _causal_pairs(a0: int, a1: int, b0: int, b1: int) -> int:
     ``p`` are query positions, ``q`` key positions (absolute within the
     document).
     """
+    if a1 <= a0 or b1 <= b0:
+        return 0
     # for each p, keys counted = clamp(p+1, b0, b1) - b0
     total = 0
     # region A: p in [max(a0,b0), min(a1,b1-1)) -> p+1-b0 keys
@@ -119,8 +123,42 @@ def _causal_pairs(a0: int, a1: int, b0: int, b1: int) -> int:
     return total
 
 
-def pair_valid_tokens(qb: Block, kb: Block, causal: bool = True) -> int:
-    """Number of valid (query, key) token pairs between two blocks."""
+def _window_pairs(a0: int, a1: int, b0: int, b1: int, w: int) -> int:
+    """Banded count #{q <= p and p - q < w}: causal minus the part the
+    window cuts off (``q <= p - w`` is causal with queries shifted by w)."""
+    return _causal_pairs(a0, a1, b0, b1) - _causal_pairs(a0 - w, a1 - w,
+                                                         b0, b1)
+
+
+def _chunk_pairs(a0: int, a1: int, b0: int, b1: int, c: int) -> int:
+    """#{q <= p and p // c == q // c}: causal restricted per chunk."""
+    lo_c = max(a0 // c, b0 // c)
+    hi_c = min((a1 - 1) // c, (b1 - 1) // c)
+    total = 0
+    for cc in range(lo_c, hi_c + 1):
+        lo, hi = cc * c, (cc + 1) * c
+        total += _causal_pairs(max(a0, lo), min(a1, hi),
+                               max(b0, lo), min(b1, hi))
+    return total
+
+
+def _segment_pairs(mask: MaskSpec, a0: int, a1: int, b0: int, b1: int
+                   ) -> int:
+    """Exact visible (query, key) pairs between two same-doc position
+    ranges under ``mask``."""
+    if mask.kind == "full":
+        return max(0, a1 - a0) * max(0, b1 - b0)
+    if mask.kind == "sliding_window":
+        return _window_pairs(a0, a1, b0, b1, mask.window)
+    if mask.kind == "chunked":
+        return _chunk_pairs(a0, a1, b0, b1, mask.chunk)
+    return _causal_pairs(a0, a1, b0, b1)
+
+
+def pair_valid_tokens(qb: Block, kb: Block, mask=True) -> int:
+    """Number of mask-visible (query, key) token pairs between two
+    blocks (``mask``: MaskSpec or legacy ``causal: bool``)."""
+    mask = coerce_mask(mask)
     total = 0
     for sa in qb.segments:
         if sa.seq_id == PAD_SEGMENT:
@@ -128,47 +166,52 @@ def pair_valid_tokens(qb: Block, kb: Block, causal: bool = True) -> int:
         for sb in kb.segments:
             if sb.seq_id != sa.seq_id:
                 continue
-            if causal:
-                total += _causal_pairs(sa.start, sa.end, sb.start, sb.end)
-            else:
-                total += sa.length * sb.length
+            total += _segment_pairs(mask, sa.start, sa.end,
+                                    sb.start, sb.end)
     return total
 
 
 def pair_flops(qb: Block, kb: Block, n_q_heads: int, head_dim: int,
-               causal: bool = True, backward: bool = False) -> float:
+               mask=True, backward: bool = False) -> float:
     """Attention FLOPs of one (q-block, kv-block) pair.
 
     ``4 * pairs * H * D`` forward (QK^T and PV matmuls); backward is ~2.5x
     forward for flash-style kernels (dQ, dK, dV + recompute).
     """
-    pairs = pair_valid_tokens(qb, kb, causal)
+    pairs = pair_valid_tokens(qb, kb, mask)
     f = 4.0 * pairs * n_q_heads * head_dim
     return f * 2.5 if backward else f
 
 
 def block_q_flops(batch: BlockedBatch, deps: Sequence[Sequence[int]],
-                  n_q_heads: int, head_dim: int, causal: bool = True
+                  n_q_heads: int, head_dim: int, mask=True
                   ) -> np.ndarray:
     """Total attention FLOPs attributed to each block's *queries*.
 
     This is the compute cost ``c_i`` fed to Algorithm 1: the work performed
     wherever block i's queries are placed.  Vectorized closed form
-    (§Perf planner-latency iteration): a causal query at in-document
-    position p attends p+1 keys, so a block's cost is
-    ``4·H·Dh·Σ(p+1)`` over its real tokens; non-causal uses the full
-    document length per token.  Equal to the per-pair sum (property
-    tested against :func:`block_q_flops_pairwise`).
+    (§Perf planner-latency iteration): the number of keys a query at
+    in-document position p sees is ``p+1`` (causal), ``min(p+1, W)``
+    (sliding window), ``p % C + 1`` (chunked), or the document length
+    (full), so a block's cost is ``4·H·Dh·Σ keys(p)`` over its real
+    tokens.  Equal to the per-pair sum (property tested against
+    :func:`block_q_flops_pairwise`).
     """
+    mask = coerce_mask(mask)
     seg = batch.seg_ids
     pos = batch.positions
     live = seg >= 0
-    if causal:
-        per_tok = np.where(live, pos.astype(np.float64) + 1.0, 0.0)
-    else:
+    if mask.kind == "full":
         lens = np.zeros(max(len(batch.seqlens), 1), dtype=np.float64)
         lens[:len(batch.seqlens)] = batch.seqlens
         per_tok = np.where(live, lens[np.clip(seg, 0, None)], 0.0)
+    else:
+        keys = pos.astype(np.float64) + 1.0
+        if mask.kind == "sliding_window":
+            keys = np.minimum(keys, float(mask.window))
+        elif mask.kind == "chunked":
+            keys = (pos % mask.chunk).astype(np.float64) + 1.0
+        per_tok = np.where(live, keys, 0.0)
     per_block = per_tok.reshape(batch.n_blocks, batch.block_size).sum(1)
     return 4.0 * n_q_heads * head_dim * per_block
 
@@ -176,13 +219,13 @@ def block_q_flops(batch: BlockedBatch, deps: Sequence[Sequence[int]],
 def block_q_flops_pairwise(batch: BlockedBatch,
                            deps: Sequence[Sequence[int]],
                            n_q_heads: int, head_dim: int,
-                           causal: bool = True) -> np.ndarray:
+                           mask=True) -> np.ndarray:
     """Reference implementation: explicit per-(q,kv)-block pair sums."""
     out = np.zeros(batch.n_blocks, dtype=np.float64)
     for i, dep in enumerate(deps):
         qb = batch.blocks[i]
         out[i] = sum(
-            pair_flops(qb, batch.blocks[j], n_q_heads, head_dim, causal)
+            pair_flops(qb, batch.blocks[j], n_q_heads, head_dim, mask)
             for j in dep)
     return out
 
@@ -193,12 +236,29 @@ def block_memory(batch: BlockedBatch) -> np.ndarray:
     return np.full(batch.n_blocks, batch.block_size, dtype=np.float64)
 
 
+def doc_valid_pairs(L: int, mask=True) -> int:
+    """Exact mask-visible (q, k) pairs of one length-``L`` document."""
+    mask = coerce_mask(mask)
+    if mask.kind == "full":
+        return L * L
+    if mask.kind == "sliding_window":
+        w = mask.window
+        if L <= w:
+            return L * (L + 1) // 2
+        return w * (w + 1) // 2 + (L - w) * w
+    if mask.kind == "chunked":
+        c = mask.chunk
+        r = L % c
+        return (L // c) * (c * (c + 1) // 2) + r * (r + 1) // 2
+    return L * (L + 1) // 2
+
+
 def total_attention_flops(batch: BlockedBatch, n_q_heads: int,
-                          head_dim: int, causal: bool = True) -> float:
+                          head_dim: int, mask=True) -> float:
     """Model FLOPs of attention over the batch (mask-aware, for MFU)."""
     total = 0
     for L in batch.seqlens:
-        total += L * (L + 1) // 2 if causal else L * L
+        total += doc_valid_pairs(int(L), mask)
     return 4.0 * total * n_q_heads * head_dim
 
 
@@ -242,7 +302,7 @@ def simulate_attention_module(
         n_workers: int,
         hw: HardwareProfile,
         n_q_heads: int, n_kv_heads: int, head_dim: int,
-        causal: bool = True,
+        mask=True,
         flags: SimFlags = SimFlags(),
         reshuffle_moved_blocks: int | None = None,
         backward: bool = False,
@@ -257,6 +317,7 @@ def simulate_attention_module(
     sets the kernel-efficiency granularity; the reshuffler toggle charges
     the layout all-to-all as exposed time.
     """
+    mask = coerce_mask(mask)
     rng = np.random.default_rng(seed)
     bs = batch.block_size
     kv_block_bytes = 2 * bs * n_kv_heads * head_dim * 2  # K+V bf16
@@ -276,7 +337,7 @@ def simulate_attention_module(
         qb = batch.blocks[i]
         seen_remote: set[int] = set()
         for j in dep:
-            f = pair_flops(qb, batch.blocks[j], n_q_heads, head_dim, causal)
+            f = pair_flops(qb, batch.blocks[j], n_q_heads, head_dim, mask)
             comp[w] += bwd * f / (hw.peak_flops * eff)
             src = int(assignment[j])
             if src != w and j not in seen_remote:
@@ -328,7 +389,7 @@ def simulate_attention_module(
     else:
         t += resh_time_total
 
-    useful = bwd * total_attention_flops(batch, n_q_heads, head_dim, causal)
+    useful = bwd * total_attention_flops(batch, n_q_heads, head_dim, mask)
     mfu = useful / (n_workers * hw.peak_flops * t) if t > 0 else 0.0
     return SimResult(time=t, per_worker_compute=comp, per_worker_comm=comm,
                      mfu=mfu, compute_imbalance=imbalance(comp),

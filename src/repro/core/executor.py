@@ -190,7 +190,7 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
                             k_seg_b=k_seg_b[lo:hi],
                             k_pos_b=k_pos_b[lo:hi])
             acc_o, acc_lse = ops.fused_run_attention(
-                qs, kxt, vxt, acc_o, acc_lse, tabs, causal=spec.causal,
+                qs, kxt, vxt, acc_o, acc_lse, tabs, mask=spec.mask,
                 impl="pallas" if cfg.impl == "fused" else "xla",
                 block_q=cfg.block_q, block_k=cfg.block_k,
                 interpret=cfg.interpret, xla_chunk=cfg.xla_chunk)
@@ -209,7 +209,7 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
                 vi = _dyn_row(vxt, kvslot)[0]
                 o_p, lse_p = ops.block_attention(
                     qi, ki, vi, sq_m, pq_m, sk_m, pk_m,
-                    causal=spec.causal, impl=cfg.impl, block_q=cfg.block_q,
+                    mask=spec.mask, impl=cfg.impl, block_q=cfg.block_q,
                     block_k=cfg.block_k, interpret=cfg.interpret,
                     xla_chunk=cfg.xla_chunk)
                 o_old = _dyn_row(acc_o, qslot)[0]
@@ -309,7 +309,7 @@ def _decode_local(q, kc, vc, lengths, *, seq_axes: tuple[str, ...],
         o, lse = ops.block_attention(
             qb[:, None], kb.transpose(1, 0, 2), vb.transpose(1, 0, 2),
             jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
-            seg_k, pos_k, causal=False, impl=impl,
+            seg_k, pos_k, mask=False, impl=impl,
             block_q=cfg.block_q, block_k=cfg.block_k,
             interpret=cfg.interpret, xla_chunk=cfg.xla_chunk)
         return o[:, 0], lse[:, 0]                            # [HQ, D], [HQ]

@@ -36,6 +36,7 @@ from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Sequence
 
+from ..masks import coerce_mask
 from .blocks import bucket_length, length_bucket_edges
 from .schedule import Schedule, StaticSpec
 
@@ -100,16 +101,22 @@ def canonicalize_lengths(seqlens: Sequence[int], budget: int,
 
 def plan_key(seqlens: Sequence[int], n_workers: int,
              tokens_per_worker: int, block_size: int, *,
-             causal: bool = True, coalesce: int = 1,
+             mask=True, coalesce: int = 1,
              locality: bool | str = "auto",
              alpha: float = 1.0, beta: float = 1.0,
              speeds=None, extra: tuple = ()) -> tuple:
     """Hashable key capturing every input the planner is deterministic
     in: the (canonical) block layout plus all scheduling knobs.
-    ``extra`` folds in caller-side context (e.g. model head counts)."""
+
+    The *full* :class:`~repro.masks.MaskSpec` identity is folded in —
+    a bare ``causal`` bool cannot distinguish window sizes or chunk
+    widths, and cached plans must never cross mask families (their
+    dependency sets and step tables differ).  ``extra`` folds in
+    caller-side context (e.g. model head counts)."""
     sp = None if speeds is None else tuple(float(s) for s in speeds)
     return (tuple(int(L) for L in seqlens), int(n_workers),
-            int(tokens_per_worker), int(block_size), bool(causal),
+            int(tokens_per_worker), int(block_size),
+            coerce_mask(mask).key(),
             int(coalesce), str(locality), float(alpha), float(beta), sp,
             tuple(extra))
 

@@ -95,9 +95,9 @@ def assign_bytescale(batch: BlockedBatch, n_workers: int,
 
 def assign_magi(batch: BlockedBatch, deps: Sequence[Sequence[int]],
                 n_workers: int, n_q_heads: int, head_dim: int,
-                causal: bool = True) -> np.ndarray:
+                mask=True) -> np.ndarray:
     """Compute-balanced only (alpha=0): ignores communication placement."""
-    costs = cm.block_q_flops(batch, deps, n_q_heads, head_dim, causal)
+    costs = cm.block_q_flops(batch, deps, n_q_heads, head_dim, mask)
     mems = cm.block_memory(batch)
     res = dist.assign_blocks(costs, mems, n_workers,
                              mem_limit=float(np.sum(mems)) / n_workers,
@@ -108,9 +108,9 @@ def assign_magi(batch: BlockedBatch, deps: Sequence[Sequence[int]],
 
 def assign_fcp(batch: BlockedBatch, deps: Sequence[Sequence[int]],
                n_workers: int, n_q_heads: int, head_dim: int,
-               causal: bool = True, locality: bool = True,
+               mask=True, locality: bool = True,
                speeds: np.ndarray | None = None) -> np.ndarray:
-    costs = cm.block_q_flops(batch, deps, n_q_heads, head_dim, causal)
+    costs = cm.block_q_flops(batch, deps, n_q_heads, head_dim, mask)
     mems = cm.block_memory(batch)
     slots = batch.n_blocks // n_workers
     stream_owner = (np.arange(batch.n_blocks) // slots).astype(np.int32)
@@ -124,7 +124,7 @@ def assign_fcp(batch: BlockedBatch, deps: Sequence[Sequence[int]],
 def assign_wlb(batch: BlockedBatch, deps: Sequence[Sequence[int]],
                n_workers: int, tokens_per_worker: int,
                hw: cm.HardwareProfile, n_q_heads: int, n_kv_heads: int,
-               head_dim: int, causal: bool = True) -> np.ndarray:
+               head_dim: int, mask=True) -> np.ndarray:
     """Oracle switch (A.3): simulate both baselines, keep the faster."""
     cands = {
         "ring": assign_ring(batch, n_workers),
@@ -134,7 +134,7 @@ def assign_wlb(batch: BlockedBatch, deps: Sequence[Sequence[int]],
     for name, a in cands.items():
         r = cm.simulate_attention_module(
             batch, a, deps, n_workers, hw, n_q_heads, n_kv_heads, head_dim,
-            causal=causal)
+            mask=mask)
         if r.time < best_t:
             best, best_t = a, r.time
     return best

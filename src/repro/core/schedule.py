@@ -35,6 +35,7 @@ from typing import Sequence
 
 import numpy as np
 
+from ..masks import MaskSpec, coerce_mask
 from . import blocks as blockslib
 from . import cost_model as cm
 from . import distributor as dist
@@ -83,7 +84,7 @@ class StaticSpec:
     n_resh_rounds: int          # coalesced reshuffle rounds
     comm_rounds: tuple[CommRound, ...]
     resh_rounds: tuple[CommRound, ...]
-    causal: bool
+    mask: MaskSpec
     # fused-run grouping: run r holds the compute steps executed between
     # the arrival commits of rounds r-1 and r — one fused kernel launch
     # per run.  ``run_starts`` (len n_runs+1) offsets into the step
@@ -221,7 +222,7 @@ def make_schedule(
         n_q_heads: int = 8,
         n_kv_heads: int = 8,
         head_dim: int = 128,
-        causal: bool = True,
+        mask=True,                              # MaskSpec | legacy causal
         coalesce: int = 1,                      # §4.2 bottom-up coalescer C
         assignment: np.ndarray | None = None,   # override (baseline policies)
         speeds: np.ndarray | None = None,
@@ -229,25 +230,34 @@ def make_schedule(
         alpha: float = 1.0,
         beta: float = 1.0,
 ) -> Schedule:
+    mask = coerce_mask(mask)
     if tokens_per_worker % block_size != 0:
         raise ValueError("tokens_per_worker must be a multiple of block_size")
     if locality == "auto":
-        # locality refinement wins when documents fit within a worker
-        # (uniform/short-dominated batches: kills reshuffle+KV traffic)
-        # but concentrates KV pulls into per-worker hotspots on heavy
-        # long-tailed batches (measured: fig11 N=256 MFU 0.49 -> 0.36) —
-        # enable only when the longest document fits one worker.
-        locality = max(seqlens, default=0) <= tokens_per_worker
+        # locality refinement wins when the dependency horizon fits
+        # within a worker (kills reshuffle+KV traffic) but concentrates
+        # KV pulls into per-worker hotspots on heavy long-tailed batches
+        # (measured: fig11 N=256 MFU 0.49 -> 0.36).  The horizon is the
+        # longest document under causal/full masks, but the *mask* caps
+        # it for windowed/chunked families: their deps are stream-local
+        # (O(W) / O(C) neighbors) and their per-block costs near-uniform,
+        # so stream placement prunes comm without hurting balance.
+        horizon = max(seqlens, default=0)
+        if mask.kind == "sliding_window":
+            horizon = min(horizon, mask.window)
+        elif mask.kind == "chunked":
+            horizon = min(horizon, mask.chunk)
+        locality = horizon <= tokens_per_worker
     slots = tokens_per_worker // block_size
     n_tokens = n_workers * tokens_per_worker
     batch = blockslib.shard_stream(seqlens, block_size, n_tokens)
-    deps = blockslib.kv_dependencies(batch, causal)
+    deps = blockslib.kv_dependencies(batch, mask)
     n_blocks = batch.n_blocks
     assert n_blocks == n_workers * slots
     stream_owner = (np.arange(n_blocks) // slots).astype(np.int32)
 
     if assignment is None:
-        costs = cm.block_q_flops(batch, deps, n_q_heads, head_dim, causal)
+        costs = cm.block_q_flops(batch, deps, n_q_heads, head_dim, mask)
         mems = cm.block_memory(batch)
         res = dist.assign_blocks(
             costs, mems, n_workers, mem_limit=float(tokens_per_worker),
@@ -355,7 +365,7 @@ def make_schedule(
         n_workers=n_workers, block_size=block_size, slots=slots,
         ext_slots=ext, coalesce=coalesce, n_matchings=n_matchings,
         n_rounds=n_rounds, n_steps=n_steps, n_resh_rounds=n_resh,
-        comm_rounds=comm_rounds, resh_rounds=resh_rounds, causal=causal,
+        comm_rounds=comm_rounds, resh_rounds=resh_rounds, mask=mask,
         run_starts=run_starts)
 
     arrays = _build_arrays(batch, spec, assignment, stream_owner, slot_of,

@@ -10,7 +10,10 @@ TPU adaptation (DESIGN.md §2): tiles are MXU-aligned (128 multiples),
 ``BlockSpec``s stage q/k/v tiles HBM→VMEM, the kv grid axis is the
 innermost (sequential) axis so the f32 accumulator lives in VMEM scratch
 across kv tiles, and masking is computed on the fly from seg/pos tiles
-(no O(Sq·Sk) mask in HBM).
+(no O(Sq·Sk) mask in HBM).  Every kernel takes a static
+:class:`~repro.masks.MaskSpec` (``_mask_tile`` adds the sliding-window
+and chunk terms on top of the segment/causal rule); legacy
+``causal: bool`` arguments coerce.
 
 Layouts follow ``ref.py``: q [H, Sq, D], k/v [KH, Sk, D] → o [H, Sq, D],
 lse [H, Sq].  Forward and backward (dq, dk, dv) kernels are provided;
@@ -35,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..masks import coerce_mask
 from .ref import NEG_INF, PAD_SEGMENT
 
 
@@ -45,11 +49,11 @@ DEFAULT_BLOCK_Q = 256
 DEFAULT_BLOCK_K = 256
 
 
-def _mask_tile(seg_q, pos_q, seg_k, pos_k, causal: bool):
+def _mask_tile(seg_q, pos_q, seg_k, pos_k, mask):
+    """Tile validity under a static MaskSpec: segment match plus the
+    family's position predicate (shared with the oracle/ref paths)."""
     ok = (seg_q[:, None] == seg_k[None, :]) & (seg_q[:, None] != PAD_SEGMENT)
-    if causal:
-        ok &= pos_q[:, None] >= pos_k[None, :]
-    return ok
+    return ok & mask.visible(pos_q[:, None], pos_k[None, :])
 
 
 # --------------------------------------------------------------------------
@@ -59,7 +63,7 @@ def _mask_tile(seg_q, pos_q, seg_k, pos_k, causal: bool):
 def _fwd_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
                 o_ref, lse_ref,
                 acc_ref, m_ref, l_ref,
-                *, scale: float, causal: bool, n_kv_tiles: int):
+                *, scale: float, mask, n_kv_tiles: int):
     j = pl.program_id(2)                       # kv tile (innermost, seq.)
 
     @pl.when(j == 0)
@@ -73,14 +77,14 @@ def _fwd_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
     v = v_ref[0].astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    mask = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...], pk_ref[...],
-                      causal)
-    s = jnp.where(mask, s, NEG_INF)
+    valid = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...],
+                       pk_ref[...], mask)
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]                        # [bq]
     m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     alpha = jnp.exp(m_prev - m_cur)
-    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    p = jnp.where(valid, jnp.exp(s - m_cur[:, None]), 0.0)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
@@ -96,13 +100,14 @@ def _fwd_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "block_q", "block_k", "interpret"))
+    "mask", "scale", "block_q", "block_k", "interpret"))
 def flash_attention_fwd(q, k, v, seg_q, pos_q, seg_k, pos_k, *,
-                        causal: bool = True, scale: float | None = None,
+                        mask=True, scale: float | None = None,
                         block_q: int = DEFAULT_BLOCK_Q,
                         block_k: int = DEFAULT_BLOCK_K,
                         interpret: bool = False):
     """Pallas forward. Returns (o [H,Sq,D] f32, lse [H,Sq] f32)."""
+    mask = coerce_mask(mask)
     h, sq, d = q.shape
     kh, sk, _ = k.shape
     assert h % kh == 0, (h, kh)
@@ -116,7 +121,7 @@ def flash_attention_fwd(q, k, v, seg_q, pos_q, seg_k, pos_k, *,
     n_k = sk // block_k
     grid = (h, n_q, n_k)
 
-    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+    kernel = functools.partial(_fwd_kernel, scale=scale, mask=mask,
                                n_kv_tiles=n_k)
     return pl.pallas_call(
         kernel,
@@ -157,7 +162,7 @@ def flash_attention_fwd(q, k, v, seg_q, pos_q, seg_k, pos_k, *,
 def _bwd_dq_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
                    lse_ref, do_ref, delta_ref, dlse_ref,
                    dq_ref, dq_acc,
-                   *, scale: float, causal: bool, n_kv_tiles: int):
+                   *, scale: float, mask, n_kv_tiles: int):
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -174,9 +179,9 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    mask = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...], pk_ref[...],
-                      causal)
-    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+    valid = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...],
+                       pk_ref[...], mask)
+    p = jnp.where(valid, jnp.exp(s - lse[:, None]), 0.0)
     dov = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     ds = p * (dov - delta[:, None] + dlse[:, None]) * scale
@@ -191,7 +196,7 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
 def _bwd_dkv_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
                     lse_ref, do_ref, delta_ref, dlse_ref,
                     dk_ref, dv_ref, dk_acc, dv_acc,
-                    *, scale: float, causal: bool, n_q_tiles: int,
+                    *, scale: float, mask, n_q_tiles: int,
                     group: int):
     # grid = (kh, n_k, group, n_q): the (group, q-tile) sweep is innermost
     # so each dk/dv output block (kh, j) is visited contiguously and the
@@ -214,9 +219,9 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    mask = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...], pk_ref[...],
-                      causal)
-    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)       # [bq, bk]
+    valid = _mask_tile(sq_ref[...], pq_ref[...], sk_ref[...],
+                       pk_ref[...], mask)
+    p = jnp.where(valid, jnp.exp(s - lse[:, None]), 0.0)       # [bq, bk]
     dv_acc[...] += jax.lax.dot_general(
         p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     dov = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
@@ -232,9 +237,9 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, sq_ref, pq_ref, sk_ref, pk_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "block_q", "block_k", "interpret"))
+    "mask", "scale", "block_q", "block_k", "interpret"))
 def flash_attention_bwd(q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse,
-                        do, dlse, *, causal: bool = True,
+                        do, dlse, *, mask=True,
                         scale: float | None = None,
                         block_q: int = DEFAULT_BLOCK_Q,
                         block_k: int = DEFAULT_BLOCK_K,
@@ -244,6 +249,7 @@ def flash_attention_bwd(q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse,
     ``dlse`` is the cotangent of the lse output (non-zero when the result
     participates in a downstream flash merge — the FCP executor's case).
     """
+    mask = coerce_mask(mask)
     h, sq, d = q.shape
     kh, sk, _ = k.shape
     group = h // kh
@@ -256,7 +262,7 @@ def flash_attention_bwd(q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse,
     delta = jnp.sum(do32 * o.astype(jnp.float32), axis=-1)    # [H, Sq]
 
     dq = pl.pallas_call(
-        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+        functools.partial(_bwd_dq_kernel, scale=scale, mask=mask,
                           n_kv_tiles=n_k),
         grid=(h, n_q, n_k),
         in_specs=[
@@ -281,7 +287,7 @@ def flash_attention_bwd(q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse,
     )(q, k, v, seg_q, pos_q, seg_k, pos_k, lse, do, delta, dlse)
 
     dk, dv = pl.pallas_call(
-        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+        functools.partial(_bwd_dkv_kernel, scale=scale, mask=mask,
                           n_q_tiles=n_q, group=group),
         grid=(kh, n_k, group, n_q),
         in_specs=[
@@ -341,7 +347,7 @@ def _fused_fwd_kernel(sq_tab, skv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
                       ks_ref, kp_ref, ai_o_ref, ai_l_ref,
                       o_ref, lse_ref,
                       acc_ref, m_ref, l_ref,
-                      *, scale: float, causal: bool, n_kv_tiles: int,
+                      *, scale: float, mask, n_kv_tiles: int,
                       n_steps: int):
     s = pl.program_id(2)                       # run step
     kj = pl.program_id(3)                      # kv tile (innermost, seq.)
@@ -364,13 +370,13 @@ def _fused_fwd_kernel(sq_tab, skv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
     v = v_ref[0, 0].astype(jnp.float32)
     sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32) * scale
-    mask = _mask_tile(qs_ref[0], qp_ref[0], ks_ref[0], kp_ref[0], causal)
-    sc = jnp.where(mask, sc, NEG_INF)
+    valid = _mask_tile(qs_ref[0], qp_ref[0], ks_ref[0], kp_ref[0], mask)
+    sc = jnp.where(valid, sc, NEG_INF)
 
     m_prev = m_ref[...]
     m_cur = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
     alpha = jnp.exp(m_prev - m_cur)
-    p = jnp.where(mask, jnp.exp(sc - m_cur[:, None]), 0.0)
+    p = jnp.where(valid, jnp.exp(sc - m_cur[:, None]), 0.0)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
@@ -384,10 +390,10 @@ def _fused_fwd_kernel(sq_tab, skv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "block_q", "block_k", "interpret"))
+    "mask", "scale", "block_q", "block_k", "interpret"))
 def fused_flash_fwd(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
                     k_seg, k_pos, acc_o, acc_lse, *,
-                    causal: bool = True, scale: float | None = None,
+                    mask=True, scale: float | None = None,
                     block_q: int = DEFAULT_BLOCK_Q,
                     block_k: int = DEFAULT_BLOCK_K,
                     interpret: bool = False):
@@ -400,6 +406,7 @@ def fused_flash_fwd(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
     named by ``step_q`` are written — combine with the incoming
     accumulators via the visited mask.
     """
+    mask = coerce_mask(mask)
     sl, h, bs, d = qs.shape
     kh = kxt.shape[1]
     group = h // kh
@@ -414,7 +421,7 @@ def fused_flash_fwd(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
     grid = (h, n_qi, n_steps, n_kj)
 
     kernel = functools.partial(
-        _fused_fwd_kernel, scale=scale, causal=causal, n_kv_tiles=n_kj,
+        _fused_fwd_kernel, scale=scale, mask=mask, n_kv_tiles=n_kj,
         n_steps=n_steps)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -468,7 +475,7 @@ def fused_flash_fwd(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
 def _fused_dq_kernel(sq_tab, skv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
                      ks_ref, kp_ref, lse_ref, go_ref, dl_ref,
                      dq_ref, dq_acc,
-                     *, scale: float, causal: bool, n_kv_tiles: int,
+                     *, scale: float, mask, n_kv_tiles: int,
                      n_steps: int):
     # gradients of the whole run chain collapse onto the run-final
     # (o, lse): ds = exp(s - L_final) ∘ (ḡ_o·v - Δ),
@@ -495,8 +502,8 @@ def _fused_dq_kernel(sq_tab, skv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
 
     sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32) * scale
-    mask = _mask_tile(qs_ref[0], qp_ref[0], ks_ref[0], kp_ref[0], causal)
-    p = jnp.where(mask, jnp.exp(sc - lse[:, None]), 0.0)
+    valid = _mask_tile(qs_ref[0], qp_ref[0], ks_ref[0], kp_ref[0], mask)
+    p = jnp.where(valid, jnp.exp(sc - lse[:, None]), 0.0)
     dov = jax.lax.dot_general(go, v, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     ds = p * (dov - delta[:, None]) * scale
@@ -509,10 +516,10 @@ def _fused_dq_kernel(sq_tab, skv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "block_q", "block_k", "interpret"))
+    "mask", "scale", "block_q", "block_k", "interpret"))
 def fused_flash_bwd_dq(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
                        k_seg, k_pos, lse, go, delta, *,
-                       causal: bool = True, scale: float | None = None,
+                       mask=True, scale: float | None = None,
                        block_q: int = DEFAULT_BLOCK_Q,
                        block_k: int = DEFAULT_BLOCK_K,
                        interpret: bool = False):
@@ -522,6 +529,7 @@ def fused_flash_bwd_dq(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
     slot's dq tile accumulates in VMEM across its contiguous steps and is
     written once.  Unvisited slots are left unwritten — mask outside.
     """
+    mask = coerce_mask(mask)
     sl, h, bs, d = qs.shape
     kh = kxt.shape[1]
     group = h // kh
@@ -536,7 +544,7 @@ def fused_flash_bwd_dq(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
     grid = (h, n_qi, n_steps, n_kj)
 
     kernel = functools.partial(
-        _fused_dq_kernel, scale=scale, causal=causal, n_kv_tiles=n_kj,
+        _fused_dq_kernel, scale=scale, mask=mask, n_kv_tiles=n_kj,
         n_steps=n_steps)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -582,7 +590,7 @@ def fused_flash_bwd_dq(step_q, step_kv, qs, kxt, vxt, q_seg, q_pos,
 def _fused_dkv_kernel(bq_tab, bkv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
                       ks_ref, kp_ref, lse_ref, go_ref, dl_ref,
                       dk_ref, dv_ref, dk_acc, dv_acc,
-                      *, scale: float, causal: bool, n_q_tiles: int,
+                      *, scale: float, mask, n_q_tiles: int,
                       group: int, n_steps: int):
     # grid = (kh, n_kj, S, group, n_qi): steps are kv-slot-sorted, so for
     # a fixed kv tile the (s, g, i) sweep visits each extended-buffer row
@@ -610,8 +618,8 @@ def _fused_dkv_kernel(bq_tab, bkv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
 
     sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32) * scale
-    mask = _mask_tile(qs_ref[0], qp_ref[0], ks_ref[0], kp_ref[0], causal)
-    p = jnp.where(mask, jnp.exp(sc - lse[:, None]), 0.0)      # [bq, bk]
+    valid = _mask_tile(qs_ref[0], qp_ref[0], ks_ref[0], kp_ref[0], mask)
+    p = jnp.where(valid, jnp.exp(sc - lse[:, None]), 0.0)      # [bq, bk]
     dv_acc[...] += jax.lax.dot_general(
         p, go, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     dov = jax.lax.dot_general(go, v, (((1,), (1,)), ((), ())),
@@ -628,10 +636,10 @@ def _fused_dkv_kernel(bq_tab, bkv_tab, q_ref, k_ref, v_ref, qs_ref, qp_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "scale", "block_q", "block_k", "interpret"))
+    "mask", "scale", "block_q", "block_k", "interpret"))
 def fused_flash_bwd_dkv(bwd_q, bwd_kv, qs, kxt, vxt, q_seg, q_pos,
                         k_seg, k_pos, lse, go, delta, *,
-                        causal: bool = True, scale: float | None = None,
+                        mask=True, scale: float | None = None,
                         block_q: int = DEFAULT_BLOCK_Q,
                         block_k: int = DEFAULT_BLOCK_K,
                         interpret: bool = False):
@@ -642,6 +650,7 @@ def fused_flash_bwd_dkv(bwd_q, bwd_kv, qs, kxt, vxt, q_seg, q_pos,
     ``go``, ``delta`` as in :func:`fused_flash_bwd_dq`.  Rows no step
     consumes are left unwritten — mask outside.
     """
+    mask = coerce_mask(mask)
     sl, h, bs, d = qs.shape
     ex, kh = kxt.shape[0], kxt.shape[1]
     group = h // kh
@@ -656,7 +665,7 @@ def fused_flash_bwd_dkv(bwd_q, bwd_kv, qs, kxt, vxt, q_seg, q_pos,
     grid = (kh, n_kj, n_steps, group, n_qi)
 
     kernel = functools.partial(
-        _fused_dkv_kernel, scale=scale, causal=causal, n_q_tiles=n_qi,
+        _fused_dkv_kernel, scale=scale, mask=mask, n_q_tiles=n_qi,
         group=group, n_steps=n_steps)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -34,13 +34,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..masks import CAUSAL, MaskSpec, coerce_mask
 from . import flash_attention as fa
 from . import ref
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
-    causal: bool = True
+    mask: MaskSpec = CAUSAL
     scale: float | None = None
     block_q: int = fa.DEFAULT_BLOCK_Q
     block_k: int = fa.DEFAULT_BLOCK_K
@@ -56,7 +57,7 @@ def _float0(x):
 def _pallas_attention(cfg: KernelConfig, q, k, v, seg_q, pos_q, seg_k,
                       pos_k):
     return fa.flash_attention_fwd(
-        q, k, v, seg_q, pos_q, seg_k, pos_k, causal=cfg.causal,
+        q, k, v, seg_q, pos_q, seg_k, pos_k, mask=cfg.mask,
         scale=cfg.scale, block_q=cfg.block_q, block_k=cfg.block_k,
         interpret=cfg.interpret)
 
@@ -71,7 +72,7 @@ def _pallas_bwd(cfg, res, cot):
     do, dlse = cot
     dq, dk, dv = fa.flash_attention_bwd(
         q, k, v, seg_q, pos_q, seg_k, pos_k, o, lse, do, dlse,
-        causal=cfg.causal, scale=cfg.scale, block_q=cfg.block_q,
+        mask=cfg.mask, scale=cfg.scale, block_q=cfg.block_q,
         block_k=cfg.block_k, interpret=cfg.interpret)
     return (dq, dk, dv, _float0(seg_q), _float0(pos_q), _float0(seg_k),
             _float0(pos_k))
@@ -81,7 +82,7 @@ _pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
 
 
 def block_attention(q, k, v, seg_q, pos_q, seg_k, pos_k, *,
-                    causal: bool = True, scale: float | None = None,
+                    mask=True, scale: float | None = None,
                     impl: str = "xla",
                     block_q: int = fa.DEFAULT_BLOCK_Q,
                     block_k: int = fa.DEFAULT_BLOCK_K,
@@ -92,16 +93,17 @@ def block_attention(q, k, v, seg_q, pos_q, seg_k, pos_k, *,
     q: [H, Sq, D]; k/v: [KH, Sk, D] → (o [H, Sq, D] f32, lse [H, Sq] f32).
     Merge partial results over disjoint KV with ``ref.merge_partials``.
     """
+    mask = coerce_mask(mask)
     if impl == "pallas":
-        cfg = KernelConfig(causal=causal, scale=scale, block_q=block_q,
+        cfg = KernelConfig(mask=mask, scale=scale, block_q=block_q,
                            block_k=block_k, interpret=interpret)
         return _pallas_attention(cfg, q, k, v, seg_q, pos_q, seg_k, pos_k)
     if impl == "xla":
         return ref.chunked_attention(q, k, v, seg_q, pos_q, seg_k, pos_k,
-                                     causal, chunk=xla_chunk, scale=scale)
+                                     mask, chunk=xla_chunk, scale=scale)
     if impl == "ref":
         return ref.reference_attention(q, k, v, seg_q, pos_q, seg_k, pos_k,
-                                       causal, scale)
+                                       mask, scale)
     raise ValueError(f"unknown impl {impl!r}")
 
 
@@ -131,7 +133,7 @@ def _fused_pallas_call(cfg: KernelConfig, qs, kxt, vxt, acc_o, acc_lse,
     o, lse = fa.fused_flash_fwd(
         tabs["step_q"], tabs["step_kv"], qs, kxt, vxt,
         tabs["q_seg"], tabs["q_pos"], tabs["k_seg"], tabs["k_pos"],
-        acc_o, acc_lse, causal=cfg.causal, scale=cfg.scale,
+        acc_o, acc_lse, mask=cfg.mask, scale=cfg.scale,
         block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
     # the kernel only writes slots the run visits; carry the rest over
     vis = _visited(tabs["step_q"], qs.shape[0])
@@ -175,7 +177,7 @@ def _fused_pl_bwd(cfg, res, cot):
     d_qs = fa.fused_flash_bwd_dq(
         tabs["step_q"], tabs["step_kv"], qs, kxt, vxt,
         tabs["q_seg"], tabs["q_pos"], tabs["k_seg"], tabs["k_pos"],
-        l2, g_o, delta, causal=cfg.causal, scale=cfg.scale,
+        l2, g_o, delta, mask=cfg.mask, scale=cfg.scale,
         block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
     visq = _visited(tabs["step_q"], qs.shape[0])
     d_qs = jnp.where(visq[:, None, None, None], d_qs, 0.0).astype(qs.dtype)
@@ -183,7 +185,7 @@ def _fused_pl_bwd(cfg, res, cot):
     d_k, d_v = fa.fused_flash_bwd_dkv(
         tabs["bwd_q"], tabs["bwd_kv"], qs, kxt, vxt,
         tabs["q_seg"], tabs["q_pos"], tabs["k_seg_b"], tabs["k_pos_b"],
-        l2, g_o, delta, causal=cfg.causal, scale=cfg.scale,
+        l2, g_o, delta, mask=cfg.mask, scale=cfg.scale,
         block_q=cfg.block_q, block_k=cfg.block_k, interpret=cfg.interpret)
     visk = _visited(tabs["bwd_kv"], kxt.shape[0])
     d_k = jnp.where(visk[:, None, None, None], d_k, 0.0).astype(kxt.dtype)
@@ -196,7 +198,7 @@ def _fused_pl_bwd(cfg, res, cot):
 _fused_pallas.defvjp(_fused_pl_fwd, _fused_pl_bwd)
 
 
-def _fused_xla(qs, kxt, vxt, acc_o, acc_lse, tabs, *, causal: bool,
+def _fused_xla(qs, kxt, vxt, acc_o, acc_lse, tabs, *, mask: MaskSpec,
                scale: float | None, chunk: int):
     """Batched fallback: one vmapped attention over the run's steps and
     one scatter flash-merge into the accumulators (plain autodiff)."""
@@ -209,7 +211,7 @@ def _fused_xla(qs, kxt, vxt, acc_o, acc_lse, tabs, *, causal: bool,
     pq = jnp.take(tabs["q_pos"], idx, axis=0)
     o_p, lse_p = jax.vmap(
         lambda q, k, v, a, b, c, e: ref.chunked_attention(
-            q, k, v, a, b, c, e, causal, chunk, scale))(
+            q, k, v, a, b, c, e, mask, chunk, scale))(
         q_r, k_r, v_r, sq, pq, tabs["k_seg"], tabs["k_pos"])
 
     # single-pass flash merge of {acc} ∪ {partials}: scatter-max the
@@ -224,7 +226,7 @@ def _fused_xla(qs, kxt, vxt, acc_o, acc_lse, tabs, *, causal: bool,
 
 
 def fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs, *,
-                        causal: bool = True, scale: float | None = None,
+                        mask=True, scale: float | None = None,
                         impl: str = "xla",
                         block_q: int = fa.DEFAULT_BLOCK_Q,
                         block_k: int = fa.DEFAULT_BLOCK_K,
@@ -237,13 +239,14 @@ def fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs, *,
     the updated accumulators; slots the run does not visit pass through
     unchanged (so gradients flow across runs).
     """
+    mask = coerce_mask(mask)
     if impl == "pallas":
-        cfg = KernelConfig(causal=causal, scale=scale, block_q=block_q,
+        cfg = KernelConfig(mask=mask, scale=scale, block_q=block_q,
                            block_k=block_k, interpret=interpret)
         return _fused_pallas(cfg, qs, kxt, vxt, acc_o, acc_lse, tabs)
     if impl == "xla":
         return _fused_xla(qs, kxt, vxt, acc_o, acc_lse, tabs,
-                          causal=causal, scale=scale, chunk=xla_chunk)
+                          mask=mask, scale=scale, chunk=xla_chunk)
     raise ValueError(f"unknown fused impl {impl!r}")
 
 

@@ -5,8 +5,11 @@ Conventions shared by every implementation in this package:
 * layouts are head-leading: ``q: [H, Sq, D]``, ``k/v: [KH, Sk, D]``,
   ``o: [H, Sq, D]``, ``lse: [H, Sq]`` (GQA: query head ``h`` reads kv head
   ``h // (H // KH)``),
-* masking is entirely described by per-token ``(segment_id, position)``:
-  ``valid = (seg_q == seg_k) & (seg_q != PAD) & (~causal | pos_q >= pos_k)``,
+* masking is entirely described by per-token ``(segment_id, position)``
+  plus a :class:`~repro.masks.MaskSpec` family:
+  ``valid = (seg_q == seg_k) & (seg_q != PAD) & mask.visible(pos_q,
+  pos_k)`` (legacy ``causal: bool`` arguments coerce — True → causal,
+  False → full),
 * outputs are *normalized within the call* plus a log-sum-exp, so partial
   results over disjoint KV ranges merge exactly with :func:`merge_partials`
   — the primitive the FCP executor builds distributed attention from,
@@ -18,23 +21,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..masks import coerce_mask
+
 NEG_INF = -1e30
 PAD_SEGMENT = -1
 
 
 def mask_matrix(seg_q: jax.Array, pos_q: jax.Array, seg_k: jax.Array,
-                pos_k: jax.Array, causal: bool) -> jax.Array:
-    """[Sq, Sk] bool validity mask."""
+                pos_k: jax.Array, mask) -> jax.Array:
+    """[Sq, Sk] bool validity mask under a MaskSpec (or causal bool).
+
+    The position predicate is ``MaskSpec.visible`` itself — one
+    implementation shared by the oracle, the xla path, and the Pallas
+    ``_mask_tile`` — so a new mask family lands everywhere at once.
+    """
+    mask = coerce_mask(mask)
     ok = (seg_q[:, None] == seg_k[None, :]) & (seg_q[:, None] != PAD_SEGMENT)
-    if causal:
-        ok &= pos_q[:, None] >= pos_k[None, :]
-    return ok
+    return ok & mask.visible(pos_q[:, None], pos_k[None, :])
 
 
 def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                         seg_q: jax.Array, pos_q: jax.Array,
                         seg_k: jax.Array, pos_k: jax.Array,
-                        causal: bool = True,
+                        mask=True,
                         scale: float | None = None
                         ) -> tuple[jax.Array, jax.Array]:
     """Dense oracle. Returns ``(o [H,Sq,D], lse [H,Sq])`` in f32."""
@@ -52,7 +61,7 @@ def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     s = jax.lax.dot_general(
         q, kx, (((2,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.float32) * scale
-    m = mask_matrix(seg_q, pos_q, seg_k, pos_k, causal)
+    m = mask_matrix(seg_q, pos_q, seg_k, pos_k, mask)
     s = jnp.where(m[None], s, NEG_INF)
     smax = jnp.max(s, axis=-1)                   # [H, Sq]
     p = jnp.where(m[None], jnp.exp(s - smax[..., None]), 0.0)
@@ -88,7 +97,7 @@ def merge_many(os: jax.Array, lses: jax.Array) -> tuple[jax.Array, jax.Array]:
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       seg_q: jax.Array, pos_q: jax.Array,
                       seg_k: jax.Array, pos_k: jax.Array,
-                      causal: bool = True, chunk: int = 512,
+                      mask=True, chunk: int = 512,
                       scale: float | None = None
                       ) -> tuple[jax.Array, jax.Array]:
     """Flash-style chunked jnp attention (the ``xla`` impl).
@@ -101,7 +110,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     sk = k.shape[1]
     if sk <= chunk:
         return reference_attention(q, k, v, seg_q, pos_q, seg_k, pos_k,
-                                   causal, scale)
+                                   mask, scale)
     n_chunks = (sk + chunk - 1) // chunk
     pad = n_chunks * chunk - sk
     if pad:
@@ -118,7 +127,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         o_acc, lse_acc = carry
         kc_, vc_, sg_, ps_ = x
         o_c, lse_c = reference_attention(q, kc_, vc_, seg_q, pos_q, sg_, ps_,
-                                         causal, scale)
+                                         mask, scale)
         return merge_partials(o_acc, lse_acc, o_c, lse_c), None
 
     o0 = jnp.zeros((h, sq, d), jnp.float32)

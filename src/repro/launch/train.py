@@ -29,6 +29,7 @@ from ..core import executor as ex
 from ..core import plan_cache as pc
 from ..core.schedule import Schedule, make_schedule
 from ..data.loader import Batch, SyntheticLoader
+from ..masks import MaskSpec, coerce_mask, parse_mask
 from ..models import Model, dense_attn_fn
 from ..optimizer import adamw, schedules
 from ..parallel import sharding as sh
@@ -52,15 +53,28 @@ def make_fcp_attn_fn(sched: Schedule, mesh, pcfg: ParallelConfig
     return attn
 
 
+def layer_mask_specs(cfg: ModelConfig, pcfg: ParallelConfig
+                     ) -> tuple[MaskSpec, ...]:
+    """Per-layer mask family: the model config's ``attn_mask_pattern``
+    (cycled over the stack) when present, else the run-wide
+    ``ParallelConfig.attn_mask`` for every layer."""
+    n = max(cfg.n_layers, 1)
+    if getattr(cfg, "attn_mask_pattern", ()):
+        pat = [parse_mask(str(s)) for s in cfg.attn_mask_pattern]
+        return tuple(pat[i % len(pat)] for i in range(n))
+    return (coerce_mask(pcfg.attn_mask),) * n
+
+
 def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
                    n_cp: int, tokens_per_worker: int,
-                   speeds: np.ndarray | None = None) -> Schedule:
+                   speeds: np.ndarray | None = None,
+                   mask=True) -> Schedule:
     tp = 1  # schedule is head-count agnostic (costs scale uniformly)
     nh, nkv = cfg.padded_heads(tp)
     return make_schedule(
         seqlens, n_cp, tokens_per_worker, pcfg.block_size,
         n_q_heads=max(nh, 1), n_kv_heads=max(nkv, 1),
-        head_dim=max(cfg.head_dim, 1), causal=True, speeds=speeds,
+        head_dim=max(cfg.head_dim, 1), mask=mask, speeds=speeds,
         coalesce=pcfg.coalesce,
         locality={"auto": "auto", "on": True, "off": False}.get(
             str(pcfg.locality), pcfg.locality))
@@ -68,12 +82,13 @@ def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
 
 def schedule_plan_key(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
                       n_cp: int, tokens_per_worker: int,
-                      speeds: np.ndarray | None = None) -> tuple:
+                      speeds: np.ndarray | None = None,
+                      mask=True) -> tuple:
     """Plan-cache key matching :func:`build_schedule`'s determinism."""
     nh, nkv = cfg.padded_heads(1)
     return pc.plan_key(
         seqlens, n_cp, tokens_per_worker, pcfg.block_size,
-        causal=True, coalesce=pcfg.coalesce, locality=pcfg.locality,
+        mask=mask, coalesce=pcfg.coalesce, locality=pcfg.locality,
         speeds=speeds, extra=(max(nh, 1), max(nkv, 1),
                               max(cfg.head_dim, 1)))
 
@@ -186,6 +201,12 @@ def main(argv=None):
                    help="kernel kv tile (pallas/fused impls)")
     p.add_argument("--attn-interpret", action="store_true",
                    help="run pallas impls in interpret mode (CPU)")
+    p.add_argument("--attn-mask", default="causal",
+                   help="run-wide attention-mask family: causal | full |"
+                        " swa:4096 | chunked:8192.  Models with a"
+                        " per-layer attn_mask_pattern in their config"
+                        " override this; each distinct mask gets its own"
+                        " FCP schedule (per-layer-group scheduling)")
     p.add_argument("--coalesce", type=int, default=16,
                    help="bottom-up coalescer degree C (1 = off)")
     p.add_argument("--plan-buckets", type=int, default=0,
@@ -230,6 +251,7 @@ def main(argv=None):
                           attn_block_q=args.attn_block_q,
                           attn_block_k=args.attn_block_k,
                           attn_interpret=args.attn_interpret,
+                          attn_mask=args.attn_mask,
                           plan_buckets=args.plan_buckets,
                           plan_cache_size=args.plan_cache_size,
                           plan_ahead=args.plan_ahead)
@@ -254,13 +276,30 @@ def main(argv=None):
     plan_cache = pc.PlanCache(pcfg.plan_cache_size)
     planner = pc.PlanAheadPlanner(plan_cache, enabled=pcfg.plan_ahead)
     fcp = cfg.uses_attention and n_cp > 1
+    # per-layer-group scheduling: one FCP schedule (and one plan-cache
+    # key) per distinct mask family in the model; layers route to their
+    # group's attention closure
+    layer_masks = layer_mask_specs(cfg, pcfg)
+    group_masks = list(dict.fromkeys(layer_masks))
 
-    def plan_of(seqlens):
+    def plan_of(seqlens, mask):
         key = schedule_plan_key(cfg, pcfg, seqlens, n_cp,
-                                args.tokens_per_worker)
+                                args.tokens_per_worker, mask=mask)
         build = functools.partial(build_schedule, cfg, pcfg, seqlens,
-                                  n_cp, args.tokens_per_worker)
+                                  n_cp, args.tokens_per_worker, mask=mask)
         return key, build
+
+    def route_layers(fn_of_mask) -> object:
+        """One shared closure when the model is mask-uniform, else the
+        per-layer sequence the model unrolls over."""
+        if len(group_masks) == 1:
+            return fn_of_mask(group_masks[0])
+        if cfg.family not in ("dense", "moe", "audio", "vlm"):
+            raise ValueError(
+                f"per-layer attention-mask patterns are not supported for "
+                f"family {cfg.family!r} (shared/absent attention)")
+        by_mask = {m: fn_of_mask(m) for m in group_masks}
+        return tuple(by_mask[m] for m in layer_masks)
 
     step_cache: dict = {}
     mgr = None
@@ -273,21 +312,30 @@ def main(argv=None):
         b = loader.next()
         batch = batch_arrays(b, cfg)
         if fcp:
-            key, build = plan_of(b.seqlens)
-            sched = planner.get(key, build)
-            if step + 1 < args.steps:
-                # plan batch t+1 while this step compiles/executes
-                planner.prefetch(*plan_of(loader.peek_seqlens()))
+            scheds: dict[MaskSpec, Schedule] = {}
+            keys = []
+            nxt = loader.peek_seqlens() if step + 1 < args.steps else None
+            for m in group_masks:
+                key_m, build_m = plan_of(b.seqlens, m)
+                scheds[m] = planner.get(key_m, build_m)
+                keys.append(key_m)
+                if nxt is not None:
+                    # plan batch t+1 while this step compiles/executes
+                    planner.prefetch(*plan_of(nxt, m))
+            key = tuple(keys)
         else:
-            key, sched = b.composition_id, None
+            key, scheds = b.composition_id, None
         if key not in step_cache:
             if not cfg.uses_attention:
                 attn = None
             elif fcp:
-                attn = make_fcp_attn_fn(sched, mesh, pcfg)
+                attn = route_layers(
+                    lambda m: make_fcp_attn_fn(scheds[m], mesh, pcfg))
             else:
-                attn = dense_attn_fn(jnp.asarray(b.seg_ids),
-                                     batch["positions"])
+                seg_j = jnp.asarray(b.seg_ids)
+                attn = route_layers(
+                    lambda m: dense_attn_fn(seg_j, batch["positions"],
+                                            mask=m))
             ts = build_train_step(model, mesh, pcfg, tcfg, attn)
             step_cache[key] = jit_train_step(
                 ts, mesh, params, opt, residual, batch)

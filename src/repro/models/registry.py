@@ -166,11 +166,12 @@ class Model:
         return sum(int(x.size) for x in jax.tree.leaves(params))
 
 
-def dense_attn_fn(seg: jax.Array, pos: jax.Array, causal: bool = True,
+def dense_attn_fn(seg: jax.Array, pos: jax.Array, mask=True,
                   chunk: int = 512):
     """Single-device oracle attention over the packed stream (smoke tests
     and the quickstart example): reshapes frames to the stream and runs
-    chunked masked attention."""
+    chunked masked attention.  ``mask`` is a MaskSpec (or legacy causal
+    bool), so the oracle covers every mask family."""
     from ..kernels import ref
 
     def attn(q, k, v):
@@ -182,7 +183,7 @@ def dense_attn_fn(seg: jax.Array, pos: jax.Array, causal: bool = True,
         s_flat = seg.reshape(f * t)
         p_flat = pos.reshape(f * t)
         o, _ = ref.chunked_attention(qq, kk, vv, s_flat, p_flat, s_flat,
-                                     p_flat, causal, chunk=chunk)
+                                     p_flat, mask, chunk=chunk)
         return o.transpose(1, 0, 2).reshape(f, t, h, d)
 
     return attn
@@ -205,7 +206,7 @@ def dense_decode_attn(q, kc, vc, lengths):
         o, _ = ref.reference_attention(
             qb[:, None], kb.transpose(1, 0, 2), vb.transpose(1, 0, 2),
             jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
-            seg_k, pos, causal=False)
+            seg_k, pos, mask=False)
         return o[:, 0]
 
     return jax.vmap(one)(q, kc, vc, lengths)

@@ -145,17 +145,37 @@ def forward(params, cfg: ModelConfig, batch: dict,
             attn_fn: Callable, remat=False,
             return_features: bool = False) -> jax.Array:
     """batch: tokens [F, T], positions [F, T] (+ frontend_*). -> logits
-    (or pre-unembed features for the chunked-loss path)."""
+    (or pre-unembed features for the chunked-loss path).
+
+    ``attn_fn`` is either one callable shared by every layer (scanned —
+    one trace for the whole stack) or a per-layer sequence of callables
+    (models that interleave mask families route each layer through its
+    mask group's schedule; the stack unrolls so each group's distinct
+    executor/schedule closure applies to its own layers).
+    """
     x = embed_tokens(params, cfg, batch)
     pos = batch["positions"]
-    body = apply_remat(
-        functools.partial(_layer_body, cfg=cfg, pos=pos, attn_fn=attn_fn),
-        remat)
+    if attn_fn is not None and not callable(attn_fn):
+        fns = list(attn_fn)
+        if len(fns) != cfg.n_layers:
+            raise ValueError(
+                f"per-layer attn_fn sequence has {len(fns)} entries for "
+                f"{cfg.n_layers} layers")
+        for i, fn in enumerate(fns):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            body = apply_remat(
+                functools.partial(_layer_body, cfg=cfg, pos=pos,
+                                  attn_fn=fn), remat)
+            x = body(x, lp)
+    else:
+        body = apply_remat(
+            functools.partial(_layer_body, cfg=cfg, pos=pos,
+                              attn_fn=attn_fn), remat)
 
-    def scan_fn(x, lp):
-        return body(x, lp), None
+        def scan_fn(x, lp):
+            return body(x, lp), None
 
-    x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+        x, _ = jax.lax.scan(scan_fn, x, params["layers"])
     if return_features:
         return x
     return unembed(params, cfg, x)

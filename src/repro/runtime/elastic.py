@@ -10,8 +10,12 @@ NamedSharding over whatever mesh exists), so elasticity reduces to:
 3. rebuild the loader's frame geometry (frames = CP size) and continue
    from the last committed checkpoint.
 
-``replan`` performs (2); the elastic restart example/test drives the full
-(1)-(3) loop, shrinking 4 -> 2 workers mid-run and growing back.
+``replan`` performs (2); models that interleave mask families carry one
+schedule per distinct :class:`~repro.masks.MaskSpec`, and
+``replan_groups`` rebuilds *all* of them for the new worker count so an
+elastic event never silently collapses the per-layer-group scheduling to
+one mask.  The elastic restart example/test drives the full (1)-(3)
+loop, shrinking 4 -> 2 workers mid-run and growing back.
 """
 
 from __future__ import annotations
@@ -23,6 +27,7 @@ import numpy as np
 from ..configs.base import ParallelConfig
 from ..core import plan_cache as pc
 from ..core.schedule import Schedule, make_schedule
+from ..masks import MaskSpec, coerce_mask
 
 # replanned schedules keep the configured coalescing by default — an
 # elastic resize must not silently drop the launch amortization
@@ -31,7 +36,7 @@ _DEFAULT_COALESCE = ParallelConfig().coalesce
 
 def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            *, n_q_heads: int, n_kv_heads: int, head_dim: int,
-           causal: bool = True, coalesce: int = _DEFAULT_COALESCE,
+           mask=True, coalesce: int = _DEFAULT_COALESCE,
            speeds: np.ndarray | None = None,
            pcfg: ParallelConfig | None = None,
            cache: pc.PlanCache | None = None) -> Schedule:
@@ -50,8 +55,11 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     desync the schedule from the generated data.  ``cache`` lets the
     caller keep a live :class:`PlanCache` across the resize; the new
     worker count changes every key, so old entries never collide, and a
-    re-grown fleet re-hits its pre-shrink plans.
+    re-grown fleet re-hits its pre-shrink plans.  ``mask`` (a
+    :class:`~repro.masks.MaskSpec` or legacy causal bool) is part of the
+    plan-cache key, so schedules of different mask families never mix.
     """
+    mask = coerce_mask(mask)
     if pcfg is not None:
         coalesce = pcfg.coalesce
     total = int(sum(seqlens))
@@ -60,14 +68,42 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     def build() -> Schedule:
         return make_schedule(seqlens, new_n_workers, tpw, block_size,
                              n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
-                             head_dim=head_dim, causal=causal,
+                             head_dim=head_dim, mask=mask,
                              coalesce=coalesce, speeds=speeds)
 
     if cache is None:
         return build()
     key = pc.plan_key(seqlens, new_n_workers, tpw, block_size,
-                      causal=causal, coalesce=coalesce, speeds=speeds)
+                      mask=mask, coalesce=coalesce, speeds=speeds)
     return cache.get_or_build(key, build)
+
+
+def replan_groups(seqlens: Sequence[int], new_n_workers: int,
+                  block_size: int, masks: Sequence, *, n_q_heads: int,
+                  n_kv_heads: int, head_dim: int,
+                  coalesce: int = _DEFAULT_COALESCE,
+                  speeds: np.ndarray | None = None,
+                  pcfg: ParallelConfig | None = None,
+                  cache: pc.PlanCache | None = None
+                  ) -> dict[MaskSpec, Schedule]:
+    """Rebuild one schedule per *distinct* mask for the new worker count.
+
+    ``masks`` is the model's per-layer mask sequence (or any iterable of
+    MaskSpecs / legacy bools); duplicates collapse, order of first
+    appearance is preserved.  Returns ``{mask_spec: schedule}`` — the
+    caller re-routes each layer's attention fn through its mask's
+    schedule, so an elastic resize preserves every layer group.
+    """
+    out: dict[MaskSpec, Schedule] = {}
+    for m in masks:
+        m = coerce_mask(m)
+        if m in out:
+            continue
+        out[m] = replan(seqlens, new_n_workers, block_size,
+                        n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
+                        head_dim=head_dim, mask=m, coalesce=coalesce,
+                        speeds=speeds, pcfg=pcfg, cache=cache)
+    return out
 
 
 def reshape_frames(arr: np.ndarray, new_n_workers: int) -> np.ndarray:

@@ -39,7 +39,7 @@ def run_case(bsz, s, hq, kh, d, mesh_shape, mesh_axes, batch_axis, seq_axes,
         o_ref, _ = ref.reference_attention(
             q[b][:, None], kc[b].transpose(1, 0, 2),
             vc[b].transpose(1, 0, 2), jnp.zeros((1,), jnp.int32),
-            jnp.zeros((1,), jnp.int32), seg_k, pos, causal=False)
+            jnp.zeros((1,), jnp.int32), seg_k, pos, mask=False)
         err = np.abs(o[b] - np.asarray(o_ref[:, 0])).max()
         assert err < 1e-5, (b, err)
     return True

@@ -26,17 +26,17 @@ from repro.kernels import ref                                   # noqa: E402
 
 
 def run_case(seqlens, n_workers, tokens_per_worker, block_size, mesh_shape,
-             mesh_axes, hq, kh, d, causal, policy="fcp", n_pods=1, seed=0,
+             mesh_axes, hq, kh, d, mask, policy="fcp", n_pods=1, seed=0,
              check_grad=True, coalesce=1, return_out=False):
     rng = np.random.default_rng(seed)
     sched = make_schedule(seqlens, n_workers, tokens_per_worker, block_size,
                           n_q_heads=hq, n_kv_heads=kh, head_dim=d,
-                          causal=causal, coalesce=coalesce)
+                          mask=mask, coalesce=coalesce)
     if policy == "ring":    # baselines run through the same executor
         a = policies.assign_ring(sched.batch, n_workers)
         sched = make_schedule(seqlens, n_workers, tokens_per_worker,
                               block_size, n_q_heads=hq, n_kv_heads=kh,
-                              head_dim=d, causal=causal, assignment=a,
+                              head_dim=d, mask=mask, assignment=a,
                               coalesce=coalesce)
     n_tok = sched.batch.n_tokens                 # per pod
     total = n_pods * n_tok
@@ -52,7 +52,7 @@ def run_case(seqlens, n_workers, tokens_per_worker, block_size, mesh_shape,
         sl = slice(p * n_tok, (p + 1) * n_tok)
         o_p, _ = ref.reference_attention(
             q[sl].transpose(1, 0, 2), k[sl].transpose(1, 0, 2),
-            v[sl].transpose(1, 0, 2), seg, pos, seg, pos, causal)
+            v[sl].transpose(1, 0, 2), seg, pos, seg, pos, mask)
         o_ref[sl] = np.asarray(o_p.transpose(1, 0, 2))
 
     mesh = jax.make_mesh(mesh_shape, mesh_axes)
@@ -88,7 +88,7 @@ def run_case(seqlens, n_workers, tokens_per_worker, block_size, mesh_shape,
                 sl = slice(p * n_tok, (p + 1) * n_tok)
                 o, _ = ref.reference_attention(
                     q[sl].transpose(1, 0, 2), k[sl].transpose(1, 0, 2),
-                    v[sl].transpose(1, 0, 2), seg, pos, seg, pos, causal)
+                    v[sl].transpose(1, 0, 2), seg, pos, seg, pos, mask)
                 tot = tot + jnp.sum(o.transpose(1, 0, 2) * key[sl])
             return tot
 
@@ -107,24 +107,24 @@ def main():
     cases = [
         dict(seqlens=[512] * 16, n_workers=8, tokens_per_worker=1024,
              block_size=256, mesh_shape=(8,), mesh_axes=("data",),
-             hq=4, kh=2, d=32, causal=True),                 # packed short
+             hq=4, kh=2, d=32, mask=True),                 # packed short
         dict(seqlens=[4096, 2048, 1024, 512, 300, 200],
              n_workers=8, tokens_per_worker=1024, block_size=256,
              mesh_shape=(8,), mesh_axes=("data",),
-             hq=4, kh=2, d=32, causal=True),                 # long-tailed
+             hq=4, kh=2, d=32, mask=True),                 # long-tailed
         dict(seqlens=[6000, 1500], n_workers=4, tokens_per_worker=2048,
              block_size=512, mesh_shape=(4, 2), mesh_axes=("data", "model"),
-             hq=4, kh=2, d=32, causal=True),                 # CP x TP
+             hq=4, kh=2, d=32, mask=True),                 # CP x TP
         dict(seqlens=[3000, 1000], n_workers=4, tokens_per_worker=1024,
              block_size=256, mesh_shape=(2, 4), mesh_axes=("pod", "data"),
-             hq=2, kh=2, d=16, causal=True, n_pods=2),       # multi-pod DP
+             hq=2, kh=2, d=16, mask=True, n_pods=2),       # multi-pod DP
         dict(seqlens=[2048, 1024, 512], n_workers=8,
              tokens_per_worker=512, block_size=256, mesh_shape=(8,),
-             mesh_axes=("data",), hq=2, kh=1, d=16, causal=False),
+             mesh_axes=("data",), hq=2, kh=1, d=16, mask=False),
         dict(seqlens=[4096, 2048, 1024, 512, 300, 200],
              n_workers=8, tokens_per_worker=1024, block_size=256,
              mesh_shape=(8,), mesh_axes=("data",),
-             hq=4, kh=2, d=32, causal=True, policy="ring",
+             hq=4, kh=2, d=32, mask=True, policy="ring",
              check_grad=False),                              # ring baseline
     ]
     for i, c in enumerate(cases):
@@ -136,7 +136,7 @@ def main():
     # only comm round structure changes)
     base = dict(seqlens=[4096, 2048, 1024, 512, 300, 200], n_workers=8,
                 tokens_per_worker=1024, block_size=256, mesh_shape=(8,),
-                mesh_axes=("data",), hq=4, kh=2, d=32, causal=True)
+                mesh_axes=("data",), hq=4, kh=2, d=32, mask=True)
     _, o1 = run_case(**base, seed=7, check_grad=False, coalesce=1,
                      return_out=True)
     for C in (4, 16):

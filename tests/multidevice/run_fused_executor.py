@@ -29,7 +29,7 @@ TOL = 4e-7          # fused-vs-per-step, normalized
 
 def build(seqlens, n_workers, tpw, bs, hq, kh, d, coalesce, seed):
     sched = make_schedule(seqlens, n_workers, tpw, bs, n_q_heads=hq,
-                          n_kv_heads=kh, head_dim=d, causal=True,
+                          n_kv_heads=kh, head_dim=d, mask=True,
                           coalesce=coalesce)
     rng = np.random.default_rng(seed)
     total = sched.batch.n_tokens

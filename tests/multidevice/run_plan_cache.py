@@ -34,7 +34,7 @@ HQ, KH, D = 2, 2, 16
 
 def build(seqlens):
     return make_schedule(seqlens, N_WORKERS, TPW, BS, n_q_heads=HQ,
-                         n_kv_heads=KH, head_dim=D, causal=True,
+                         n_kv_heads=KH, head_dim=D, mask=True,
                          coalesce=4)
 
 

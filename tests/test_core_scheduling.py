@@ -47,15 +47,15 @@ def test_short_sequences_pack_into_shared_blocks():
 
 def test_kv_dependencies_causal():
     b = blockslib.shard_stream([4096], 1024)   # 4 blocks, one doc
-    deps = blockslib.kv_dependencies(b, causal=True)
+    deps = blockslib.kv_dependencies(b, mask=True)
     assert deps == [[0], [0, 1], [0, 1, 2], [0, 1, 2, 3]]
-    deps_nc = blockslib.kv_dependencies(b, causal=False)
+    deps_nc = blockslib.kv_dependencies(b, mask=False)
     assert all(d == [0, 1, 2, 3] for d in deps_nc)
 
 
 def test_kv_dependencies_no_cross_document_leak():
     b = blockslib.shard_stream([2048, 2048], 1024)
-    deps = blockslib.kv_dependencies(b, causal=True)
+    deps = blockslib.kv_dependencies(b, mask=True)
     # block 2 (doc 1 start) must not depend on doc 0's blocks
     assert deps[2] == [2]
     assert deps[3] == [2, 3]
@@ -458,7 +458,7 @@ def test_schedule_property(seqlens, n_workers, causal):
     total = sum(seqlens)
     tpw = max(1024, ((total + n_workers * 1024 - 1)
                      // (n_workers * 1024)) * 1024)
-    sched = make_schedule(seqlens, n_workers, tpw, 1024, causal=causal,
+    sched = make_schedule(seqlens, n_workers, tpw, 1024, mask=causal,
                           n_q_heads=2, n_kv_heads=2, head_dim=32)
     _check_schedule_invariants(sched, n_workers)
     plannerlib.verify_matchings(sched.comm_matchings, sched.comm_edges,
@@ -564,3 +564,42 @@ def test_vectorized_block_costs_match_pairwise():
         fast = cm.block_q_flops(b, deps, 4, 64, causal)
         slow = cm.block_q_flops_pairwise(b, deps, 4, 64, causal)
         np.testing.assert_allclose(fast, slow)
+
+
+# --------------------------------------------------------------------------
+# mask-aware scheduling (MaskSpec families through the full pipeline)
+# --------------------------------------------------------------------------
+
+def test_schedule_invariants_hold_for_every_mask_family():
+    from repro import masks
+    seqlens = [16384, 512, 512, 300, 15000]
+    n_workers = 4
+    total = sum(seqlens)
+    tpw = ((total + n_workers * 1024 - 1) // (n_workers * 1024)) * 1024
+    for mask in (masks.CAUSAL, masks.FULL, masks.sliding_window(2000),
+                 masks.chunked(4096)):
+        sched = make_schedule(seqlens, n_workers, tpw, 1024,
+                              n_q_heads=4, n_kv_heads=2, head_dim=64,
+                              mask=mask, coalesce=4)
+        assert sched.spec.mask == mask
+        _check_schedule_invariants(sched, n_workers)
+        _check_coalescing_invariants(sched)
+
+
+def test_window_schedule_prunes_comm_and_pairs():
+    """The tentpole effect at schedule level: tighter windows ship fewer
+    comm edges and schedule fewer (q, kv) pairs on a long-doc batch."""
+    from repro import masks
+    seqlens = [65536]
+    n_workers, bs = 8, 1024
+    tpw = 65536 // n_workers
+    edges, pairs = {}, {}
+    for name, mask in (("causal", masks.CAUSAL),
+                       ("w8k", masks.sliding_window(8192)),
+                       ("w2k", masks.sliding_window(2048))):
+        s = make_schedule(seqlens, n_workers, tpw, bs, n_q_heads=4,
+                          n_kv_heads=2, head_dim=64, mask=mask)
+        edges[name] = len(s.comm_edges)
+        pairs[name] = int(s.pairs_per_worker.sum())
+    assert edges["w2k"] < edges["w8k"] < edges["causal"]
+    assert pairs["w2k"] < pairs["w8k"] < pairs["causal"]

@@ -1,6 +1,8 @@
 """Pallas kernel validation: shape/dtype sweeps against the jnp oracle
 (interpret mode executes the kernel body on CPU)."""
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +13,7 @@ try:
 except ImportError:                       # minimal install: skip @given only
     from _hypothesis_fallback import given, settings, st
 
+from repro import masks
 from repro.kernels import flash_attention as fa
 from repro.kernels import ops, ref
 
@@ -62,7 +65,7 @@ def test_fwd_matches_oracle(shape, dtype, causal):
     o_ref, lse_ref = ref.reference_attention(q, k, v, sq_, pq_, sk_, pk_,
                                              causal)
     o, lse = fa.flash_attention_fwd(q, k, v, sq_, pq_, sk_, pk_,
-                                    causal=causal, block_q=bq, block_k=bk,
+                                    mask=causal, block_q=bq, block_k=bk,
                                     interpret=True)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
@@ -82,7 +85,7 @@ def test_fully_masked_rows_are_zero():
     seg_k = jnp.zeros((s,), jnp.int32)
     pos = jnp.arange(s, dtype=jnp.int32)
     o, lse = fa.flash_attention_fwd(q, k, v, seg_q, pos, seg_k, pos,
-                                    causal=True, block_q=128, block_k=128,
+                                    mask=True, block_q=128, block_k=128,
                                     interpret=True)
     assert np.all(np.asarray(o) == 0.0)
     assert np.all(np.asarray(lse) <= -1e29)
@@ -102,7 +105,7 @@ def test_bwd_matches_autodiff(shape):
 
     def loss_pl(q, k, v):
         o, lse = ops.block_attention(q, k, v, sq_, pq_, sk_, pk_,
-                                     causal=True, impl="pallas",
+                                     mask=True, impl="pallas",
                                      block_q=bq, block_k=bk, interpret=True)
         return jnp.sum(o * o) + jnp.sum(jnp.where(lse > -1e29, lse, 0.0))
 
@@ -216,7 +219,7 @@ def test_fused_fwd_matches_reference(block):
     qs, kxt, vxt, tabs, acc_o, acc_lse, meta = _fused_setup(rng)
     q_seg, q_pos, kv_seg, kv_pos = meta
     o2, l2 = ops.fused_run_attention(
-        qs, kxt, vxt, acc_o, acc_lse, tabs, causal=True, impl="pallas",
+        qs, kxt, vxt, acc_o, acc_lse, tabs, mask=True, impl="pallas",
         block_q=block, block_k=block, interpret=True)
     consumed = {0: [0], 1: [0, 1], 2: [0, 1, 2]}     # slot -> kv rows
     for slot, rows in consumed.items():
@@ -241,9 +244,9 @@ def test_fused_xla_matches_pallas_fwd():
     rng = np.random.default_rng(12)
     qs, kxt, vxt, tabs, acc_o, acc_lse, _ = _fused_setup(rng)
     o_x, l_x = ops.fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs,
-                                       causal=True, impl="xla")
+                                       mask=True, impl="xla")
     o_p, l_p = ops.fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs,
-                                       causal=True, impl="pallas",
+                                       mask=True, impl="pallas",
                                        block_q=64, block_k=64,
                                        interpret=True)
     np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_x), atol=2e-6)
@@ -264,7 +267,7 @@ def test_fused_bwd_matches_xla_autodiff():
     def loss(impl):
         def f(qs_, k_, v_, ao, al):
             o2, l2 = ops.fused_run_attention(
-                qs_, k_, v_, ao, al, tabs, causal=True, impl=impl,
+                qs_, k_, v_, ao, al, tabs, mask=True, impl=impl,
                 block_q=64, block_k=64, interpret=True)
             return (jnp.sum(o2 * key_o)
                     + jnp.sum(jnp.where(l2 > -1e29, l2 * key_l, 0.0)))
@@ -285,3 +288,164 @@ def test_fused_bwd_matches_xla_autodiff():
             m = live
         np.testing.assert_allclose(a[m], b[m], atol=5e-6, rtol=5e-6,
                                    err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# mask-family kernel parity: window / chunk terms of _mask_tile
+# (per-step pallas, fused pallas, fused xla, and xla fallback impls)
+# --------------------------------------------------------------------------
+
+# tile-boundary windows on purpose: W % block_k != 0 exercises windows
+# that start/end mid-tile in every kv tile of the sweep
+MASK_CASES = [
+    masks.sliding_window(96),            # < one 128-tile, unaligned
+    masks.sliding_window(160),           # spans two tiles, unaligned
+    masks.sliding_window(128),           # exactly one tile
+    masks.chunked(96),                   # chunk boundary mid-tile
+    masks.chunked(192),
+    masks.FULL,
+]
+
+
+@pytest.mark.parametrize("mask", MASK_CASES, ids=str)
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_masked_fwd_matches_oracle(mask, impl):
+    """Per-step kernels under window/chunk masks vs the dense oracle."""
+    h, kh, sq, sk, d, bq, bk = 4, 2, 256, 384, 64, 128, 128
+    rng = np.random.default_rng(
+        zlib.crc32(f"{mask}/{impl}".encode()))
+    q, k, v, sq_, pq_, sk_, pk_ = _make_inputs(rng, h, kh, sq, sk, d,
+                                               jnp.float32)
+    o_ref, lse_ref = ref.reference_attention(q, k, v, sq_, pq_, sk_, pk_,
+                                             mask)
+    o, lse = ops.block_attention(q, k, v, sq_, pq_, sk_, pk_, mask=mask,
+                                 impl=impl, block_q=bq, block_k=bk,
+                                 interpret=True, xla_chunk=128)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    live = np.asarray(lse_ref) > -1e29
+    np.testing.assert_allclose(np.asarray(lse)[live],
+                               np.asarray(lse_ref)[live], atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("mask", MASK_CASES, ids=str)
+def test_masked_bwd_matches_autodiff(mask):
+    """Pallas backward kernels (dq, dk, dv) under window/chunk masks vs
+    autodiff of the dense oracle (dlse included — the FCP merge case)."""
+    h, kh, sq, sk, d, bq, bk = 4, 2, 256, 256, 32, 128, 128
+    rng = np.random.default_rng(zlib.crc32(f"bwd/{mask}".encode()))
+    q, k, v, sq_, pq_, sk_, pk_ = _make_inputs(rng, h, kh, sq, sk, d,
+                                               jnp.float32)
+
+    def loss_ref(q, k, v):
+        o, lse = ref.reference_attention(q, k, v, sq_, pq_, sk_, pk_, mask)
+        return jnp.sum(o * o) + jnp.sum(jnp.where(lse > -1e29, lse, 0.0))
+
+    def loss_pl(q, k, v):
+        o, lse = ops.block_attention(q, k, v, sq_, pq_, sk_, pk_,
+                                     mask=mask, impl="pallas",
+                                     block_q=bq, block_k=bk, interpret=True)
+        return jnp.sum(o * o) + jnp.sum(jnp.where(lse > -1e29, lse, 0.0))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_pl = jax.grad(loss_pl, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g_pl, g_ref, "q k v".split()):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("mask", MASK_CASES, ids=str)
+def test_masked_fused_impls_match(mask):
+    """Fused schedule-driven kernels (pallas custom_vjp vs batched-XLA
+    autodiff) agree under window/chunk masks — outputs and gradients."""
+    rng = np.random.default_rng(zlib.crc32(f"fused/{mask}".encode()))
+    qs, kxt, vxt, tabs, acc_o, acc_lse, _ = _fused_setup(rng)
+    o_x, l_x = ops.fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs,
+                                       mask=mask, impl="xla")
+    o_p, l_p = ops.fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs,
+                                       mask=mask, impl="pallas",
+                                       block_q=64, block_k=64,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_x), atol=2e-6)
+    live = np.asarray(l_x) > -1e29
+    np.testing.assert_allclose(np.asarray(l_p)[live], np.asarray(l_x)[live],
+                               atol=2e-6)
+
+    key_o = jnp.asarray(rng.normal(size=qs.shape), jnp.float32)
+    key_l = jnp.asarray(rng.normal(size=acc_lse.shape), jnp.float32)
+
+    def loss(impl):
+        def f(qs_, k_, v_):
+            o2, l2 = ops.fused_run_attention(
+                qs_, k_, v_, acc_o, acc_lse, tabs, mask=mask, impl=impl,
+                block_q=64, block_k=64, interpret=True)
+            return (jnp.sum(o2 * key_o)
+                    + jnp.sum(jnp.where(l2 > -1e29, l2 * key_l, 0.0)))
+        return f
+
+    g_x = jax.grad(loss("xla"), argnums=(0, 1, 2))(qs, kxt, vxt)
+    g_p = jax.grad(loss("pallas"), argnums=(0, 1, 2))(qs, kxt, vxt)
+    for a, b, name in zip(g_p, g_x, ["qs", "kxt", "vxt"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-6,
+                                   rtol=5e-6, err_msg=name)
+
+
+def test_masked_fused_window_seeds_from_accumulator():
+    """A windowed fused run merged with an incoming accumulator built
+    from the same window is exactly the reference over the KV union —
+    the cross-run seeding path with a non-causal-family mask."""
+    mask = masks.sliding_window(160)                 # 160 % 64 != 0
+    rng = np.random.default_rng(21)
+    SL, H, KH, bs, d, EX = 4, 2, 2, 128, 32, 6
+    qs = jnp.asarray(rng.normal(size=(SL, H, bs, d)), jnp.float32)
+    kxt = jnp.asarray(rng.normal(size=(EX, KH, bs, d)), jnp.float32)
+    vxt = jnp.asarray(rng.normal(size=(EX, KH, bs, d)), jnp.float32)
+    q_seg = jnp.zeros((SL, bs), jnp.int32).at[SL - 1].set(-1)
+    q_pos = (jnp.arange(bs, dtype=jnp.int32)[None]
+             + jnp.arange(SL, dtype=jnp.int32)[:, None] * bs)
+    kv_seg = jnp.zeros((EX, bs), jnp.int32).at[EX - 1].set(-1)
+    kv_pos = (jnp.arange(bs, dtype=jnp.int32)[None]
+              + jnp.arange(EX, dtype=jnp.int32)[:, None] * bs)
+    # run: slot 1 consumes kv row 1 now; kv row 0 arrived "last run"
+    step_q = jnp.asarray([1], jnp.int32)
+    step_kv = jnp.asarray([1], jnp.int32)
+    tabs = dict(step_q=step_q, step_kv=step_kv, q_seg=q_seg, q_pos=q_pos,
+                k_seg=kv_seg[step_kv], k_pos=kv_pos[step_kv],
+                bwd_q=step_q, bwd_kv=step_kv,
+                k_seg_b=kv_seg[step_kv], k_pos_b=kv_pos[step_kv])
+    acc_o = jnp.zeros((SL, H, bs, d), jnp.float32)
+    acc_lse = jnp.full((SL, H, bs), ref.NEG_INF, jnp.float32)
+    o_prev, l_prev = ref.reference_attention(
+        qs[1], kxt[0], vxt[0], q_seg[1], q_pos[1], kv_seg[0], kv_pos[0],
+        mask)
+    acc_o = acc_o.at[1].set(o_prev)
+    acc_lse = acc_lse.at[1].set(l_prev)
+    o2, l2 = ops.fused_run_attention(qs, kxt, vxt, acc_o, acc_lse, tabs,
+                                     mask=mask, impl="pallas",
+                                     block_q=64, block_k=64, interpret=True)
+    kk = jnp.concatenate([kxt[0], kxt[1]], axis=1)
+    vv = jnp.concatenate([vxt[0], vxt[1]], axis=1)
+    sk = jnp.concatenate([kv_seg[0], kv_seg[1]])
+    pk = jnp.concatenate([kv_pos[0], kv_pos[1]])
+    o_ref, l_ref = ref.reference_attention(qs[1], kk, vv, q_seg[1],
+                                           q_pos[1], sk, pk, mask)
+    np.testing.assert_allclose(np.asarray(o2[1]), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    live = np.asarray(l_ref) > -1e29
+    np.testing.assert_allclose(np.asarray(l2[1])[live],
+                               np.asarray(l_ref)[live], atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_mask_tile_matches_mask_matrix():
+    """The kernel-side _mask_tile == the oracle-side mask_matrix for all
+    families (same predicate, two implementations)."""
+    rng = np.random.default_rng(3)
+    n = 192
+    seg = jnp.asarray(rng.integers(-1, 3, size=n).astype(np.int32))
+    pos = jnp.asarray(rng.integers(0, 500, size=n).astype(np.int32))
+    for mask in [masks.CAUSAL, masks.FULL] + MASK_CASES:
+        a = np.asarray(fa._mask_tile(seg, pos, seg, pos, mask))
+        b = np.asarray(ref.mask_matrix(seg, pos, seg, pos, mask))
+        np.testing.assert_array_equal(a, b, err_msg=str(mask))

@@ -1,0 +1,192 @@
+"""Differential mask conformance suite.
+
+Every mask-aware fast path in the scheduler is checked against ONE
+source of truth: the brute-force token-level ``(seg, pos)`` oracle built
+directly from :meth:`MaskSpec.visible`.  For random packings × all
+MaskSpec families:
+
+* ``blocks.kv_dependencies`` must equal the oracle's block-level
+  dependency sets exactly — no missing dependency (a visible pair whose
+  kv block is not shipped) and no dead dependency (a shipped block with
+  zero visible pairs);
+* ``cost_model.pair_valid_tokens`` must equal the oracle's exact
+  per-(q-block, kv-block) pair counts;
+* the closed-form ``block_q_flops`` must equal the pairwise sum over the
+  pruned dependency sets, and ``total_attention_flops`` the whole-mask
+  area.
+
+Runs both as a hypothesis property suite (when hypothesis is installed)
+and as a seeded deterministic sweep (minimal CI container).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # minimal install: skip @given only
+    from _hypothesis_fallback import given, settings, st
+
+from repro import masks
+from repro.core import blocks as blockslib
+from repro.core import cost_model as cm
+
+ALL_MASKS = [
+    masks.CAUSAL,
+    masks.FULL,
+    masks.sliding_window(1),
+    masks.sliding_window(64),
+    masks.sliding_window(100),          # not a divisor of any block size
+    masks.sliding_window(256),
+    masks.sliding_window(10 ** 6),      # window larger than any doc
+    masks.chunked(1),
+    masks.chunked(64),
+    masks.chunked(100),
+    masks.chunked(512),
+]
+
+
+def oracle_valid_matrix(batch, mask: masks.MaskSpec) -> np.ndarray:
+    """[n_tokens, n_tokens] brute-force validity over the whole stream."""
+    seg, pos = batch.seg_ids, batch.positions
+    ok = (seg[:, None] == seg[None, :]) & (seg[:, None] >= 0)
+    vis = mask.visible(pos[:, None], pos[None, :])
+    return ok & np.broadcast_to(vis, ok.shape)
+
+
+def oracle_block_counts(batch, mask: masks.MaskSpec) -> np.ndarray:
+    """[n_blocks, n_blocks] exact visible-pair counts per block pair."""
+    valid = oracle_valid_matrix(batch, mask)
+    nb, bs = batch.n_blocks, batch.block_size
+    return valid.reshape(nb, bs, nb, bs).sum(axis=(1, 3))
+
+
+def check_batch_against_oracle(batch, mask: masks.MaskSpec):
+    counts = oracle_block_counts(batch, mask)
+    deps = blockslib.kv_dependencies(batch, mask)
+    nb = batch.n_blocks
+    for i in range(nb):
+        dep = set(deps[i])
+        for j in range(nb):
+            got = cm.pair_valid_tokens(batch.blocks[i], batch.blocks[j],
+                                       mask)
+            assert got == counts[i, j], \
+                f"{mask}: pair_valid_tokens({i},{j}) {got} != {counts[i, j]}"
+            if counts[i, j] > 0:
+                assert j in dep, f"{mask}: missing dep {j} of block {i}"
+            else:
+                assert j not in dep, \
+                    f"{mask}: dead dep {j} of block {i} (zero visible pairs)"
+    # closed-form flops == pairwise sum over the pruned deps == mask area
+    fast = cm.block_q_flops(batch, deps, 4, 64, mask)
+    slow = cm.block_q_flops_pairwise(batch, deps, 4, 64, mask)
+    np.testing.assert_allclose(fast, slow)
+    np.testing.assert_allclose(
+        fast.sum(), 4.0 * 4 * 64 * counts.sum(), rtol=0, atol=0.5)
+    np.testing.assert_allclose(
+        cm.total_attention_flops(batch, 4, 64, mask),
+        4.0 * 4 * 64 * counts.sum(), rtol=0, atol=0.5)
+
+
+def random_packing(rng, max_total=2048):
+    """A random packed composition + block size (pad tail included)."""
+    n_docs = int(rng.integers(1, 7))
+    seqlens = [int(rng.integers(1, 700)) for _ in range(n_docs)]
+    bs = int(rng.choice([64, 128, 256]))
+    return blockslib.shard_stream(seqlens, bs)
+
+
+# --------------------------------------------------------------------------
+# deterministic sweep (always runs, no hypothesis required)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mask", ALL_MASKS, ids=str)
+def test_mask_oracle_seeded_sweep(mask):
+    for seed in range(6):
+        rng = np.random.default_rng(1000 + seed)
+        check_batch_against_oracle(random_packing(rng), mask)
+
+
+def test_mask_oracle_adversarial_layouts():
+    """Hand-picked layouts: doc spanning many blocks, doc cut exactly at
+    a window/chunk boundary, single-token docs, all-pad tail block."""
+    layouts = [
+        ([1500], 128),                   # one doc, many blocks
+        ([256, 256, 256], 256),          # docs exactly block-aligned
+        ([1, 1, 1, 900], 128),           # single-token docs
+        ([100, 28], 64),                 # pad-heavy tail
+        ([640], 64),                     # W=64 boundary-aligned
+    ]
+    for seqlens, bs in layouts:
+        batch = blockslib.shard_stream(seqlens, bs)
+        for mask in ALL_MASKS:
+            check_batch_against_oracle(batch, mask)
+
+
+def test_window_deps_are_O_window_not_O_length():
+    """The headline pruning: a long doc under a small window depends on
+    O(W / block_size) neighbor blocks, not O(L / block_size)."""
+    bs = 256
+    batch = blockslib.shard_stream([64 * bs], bs)       # 64-block doc
+    w = 2 * bs
+    deps = blockslib.kv_dependencies(batch, masks.sliding_window(w))
+    for i, dep in enumerate(deps):
+        assert len(dep) <= w // bs + 1
+        assert dep[-1] == i                             # self always last
+    causal = blockslib.kv_dependencies(batch, masks.CAUSAL)
+    assert len(causal[-1]) == 64
+    assert len(deps[-1]) == 3
+
+
+def test_chunked_deps_never_cross_chunk_boundary():
+    bs, c = 128, 512
+    batch = blockslib.shard_stream([4096], bs)
+    deps = blockslib.kv_dependencies(batch, masks.chunked(c))
+    for i, dep in enumerate(deps):
+        chunk_of = (i * bs) // c
+        for j in dep:
+            assert (j * bs) // c == chunk_of
+
+
+def test_full_mask_requires_whole_doc():
+    batch = blockslib.shard_stream([2048, 2048], 1024)
+    deps = blockslib.kv_dependencies(batch, masks.FULL)
+    assert deps[0] == [0, 1] and deps[3] == [2, 3]
+
+
+def test_mask_spec_validation_and_parse_roundtrip():
+    with pytest.raises(ValueError):
+        masks.MaskSpec("sliding_window", window=0)
+    with pytest.raises(ValueError):
+        masks.MaskSpec("chunked")
+    with pytest.raises(ValueError):
+        masks.MaskSpec("causal", window=5)
+    with pytest.raises(ValueError):
+        masks.parse_mask("banded:3")
+    for m in ALL_MASKS:
+        assert masks.parse_mask(str(m)) == m
+    assert masks.coerce_mask("swa:128") == masks.sliding_window(128)
+
+
+# --------------------------------------------------------------------------
+# hypothesis property form (runs when hypothesis is installed)
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.integers(1, 700), min_size=1, max_size=6),
+       st.sampled_from([64, 128, 256]),
+       st.sampled_from(ALL_MASKS))
+@settings(max_examples=60, deadline=None)
+def test_mask_oracle_property(seqlens, bs, mask):
+    check_batch_against_oracle(blockslib.shard_stream(seqlens, bs), mask)
+
+
+@given(st.integers(1, 80), st.integers(1, 80), st.integers(0, 50),
+       st.integers(0, 50), st.sampled_from(ALL_MASKS))
+@settings(max_examples=150, deadline=None)
+def test_segment_pairs_match_bruteforce(la, lb, a0, b0, mask):
+    """The closed-form per-segment-pair counters (causal difference for
+    windows, per-chunk causal for chunked) vs literal double loops."""
+    a1, b1 = a0 + la, b0 + lb
+    brute = sum(1 for p in range(a0, a1) for t in range(b0, b1)
+                if bool(mask.visible(p, t)))
+    assert cm._segment_pairs(mask, a0, a1, b0, b1) == brute

@@ -45,6 +45,15 @@ def test_fused_executor_multidevice():
     assert "ALL FUSED EXECUTOR CASES PASSED" in out
 
 
+@pytest.mark.slow
+def test_masked_executor_multidevice():
+    # MaskSpec-driven schedules (sliding-window / chunked / full) and
+    # mixed per-layer-group chains vs the dense single-device oracle,
+    # outputs + grads <= 1e-6, plus the swa-ships-fewer-edges assertion
+    out = _run("run_masked_executor.py", timeout=1800)
+    assert "ALL MASKED EXECUTOR CASES PASSED" in out
+
+
 def test_cp_decode_multidevice():
     out = _run("run_decode.py")
     assert "ALL MULTIDEVICE DECODE CASES PASSED" in out

@@ -252,3 +252,47 @@ def test_loader_bucketed_batches_are_learnable_shape():
     assert b.tokens.shape == (2, 8192)
     assert (b.seg_ids >= 0).all()            # budget-exact: no pad tail
     assert b.loss_mask.sum() > 0
+
+
+# --------------------------------------------------------------------------
+# MaskSpec in the plan key (regression: a causal bool can't distinguish
+# window sizes / chunk widths)
+# --------------------------------------------------------------------------
+
+def test_plan_key_distinguishes_mask_families():
+    from repro import masks
+    lens = [2048, 2048]
+    keys = [pc.plan_key(lens, 2, 2048, 1024, mask=m) for m in (
+        True, False, masks.sliding_window(1024),
+        masks.sliding_window(2048), masks.chunked(1024),
+        masks.chunked(2048))]
+    assert len(set(keys)) == len(keys)     # all distinct
+    # legacy bools coerce onto the named families — shared entries are
+    # correct there (identical schedules)
+    assert pc.plan_key(lens, 2, 2048, 1024, mask=True) == \
+        pc.plan_key(lens, 2, 2048, 1024, mask=masks.CAUSAL)
+
+
+def test_plan_cache_never_shares_entries_across_window_sizes():
+    """Two window sizes on the same batch must build two schedules (a
+    shared entry would ship W=2048's dependency set for W=1024)."""
+    from repro import masks
+    lens = [4096]
+
+    def build(w):
+        return make_schedule(lens, 2, 2048, 1024, n_q_heads=2,
+                             n_kv_heads=2, head_dim=32,
+                             mask=masks.sliding_window(w))
+
+    cache = pc.PlanCache(max_size=8)
+    k1 = pc.plan_key(lens, 2, 2048, 1024, mask=masks.sliding_window(1024))
+    k2 = pc.plan_key(lens, 2, 2048, 1024, mask=masks.sliding_window(2048))
+    s1 = cache.get_or_build(k1, lambda: build(1024))
+    s2 = cache.get_or_build(k2, lambda: build(2048))
+    assert s1 is not s2
+    assert cache.stats.misses == 2 and cache.stats.hits == 0
+    assert s1.spec.mask != s2.spec.mask
+    # the pruning is real: tighter window, fewer dependency edges
+    assert sum(map(len, s1.deps)) < sum(map(len, s2.deps))
+    # re-probe hits the right entry
+    assert cache.get_or_build(k1, lambda: build(1024)) is s1

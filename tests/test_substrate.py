@@ -296,3 +296,32 @@ def test_loader_state_resume():
                         vocab_size=50, seed=5)
     b.state = type(b.state).from_dict(state)
     np.testing.assert_array_equal(a.next().tokens, b.next().tokens)
+
+
+def test_elastic_replan_groups_preserves_every_mask():
+    """Per-layer-group elastic replans: one schedule per distinct
+    MaskSpec survives a resize, keys never collide across masks, and a
+    re-grown fleet re-hits each group's pre-shrink plan."""
+    from repro import masks
+    from repro.core import plan_cache as pc
+
+    cache = pc.PlanCache(max_size=16)
+    seqlens = [6000, 1500, 700]
+    layer_masks = [masks.sliding_window(1024), masks.sliding_window(1024),
+                   masks.CAUSAL, masks.sliding_window(1024)]
+    g4 = elastic.replan_groups(seqlens, 4, 1024, layer_masks, n_q_heads=4,
+                               n_kv_heads=2, head_dim=64, cache=cache)
+    assert set(g4) == {masks.sliding_window(1024), masks.CAUSAL}
+    assert cache.stats.misses == 2          # duplicates collapsed
+    # the window group prunes real dependencies relative to causal
+    assert sum(map(len, g4[masks.sliding_window(1024)].deps)) < \
+        sum(map(len, g4[masks.CAUSAL].deps))
+    g2 = elastic.replan_groups(seqlens, 2, 1024, layer_masks, n_q_heads=4,
+                               n_kv_heads=2, head_dim=64, cache=cache)
+    assert all(s.spec.n_workers == 2 for s in g2.values())
+    again = elastic.replan_groups(seqlens, 4, 1024, layer_masks,
+                                  n_q_heads=4, n_kv_heads=2, head_dim=64,
+                                  cache=cache)
+    assert again[masks.CAUSAL] is g4[masks.CAUSAL]
+    assert again[masks.sliding_window(1024)] is \
+        g4[masks.sliding_window(1024)]
