@@ -18,6 +18,7 @@ identify as erasing block-granular scheduling gains.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import pathlib
@@ -31,9 +32,12 @@ import jax.numpy as jnp                                         # noqa: E402
 import numpy as np                                              # noqa: E402
 
 from repro import masks                                         # noqa: E402
+from repro.core import cost_model as cm                         # noqa: E402
 from repro.core import executor, make_schedule                  # noqa: E402
 from repro.data.distributions import batch_compositions         # noqa: E402
 from repro.kernels import ops                                   # noqa: E402
+
+from scripts.check_bench import WIRE_LIMITS                     # noqa: E402
 
 from .common import calibration_ms                              # noqa: E402
 
@@ -47,10 +51,14 @@ def real_world_batch(budget: int, seed: int = 0) -> list[int]:
     return batch_compositions("real_world", budget, 1, seed=seed)[0]
 
 
-def bench(impl: str, sched, mesh, tpw, q, k, v, key, iters: int):
+def make_step(impl: str, spec, tables, mesh, tpw, key):
+    """One jitted fwd+bwd step (``sum(attn * key)`` loss + q/k/v
+    grads) over a schedule's ``(spec, tables)``.  Returns ``(step,
+    attn)`` — ``attn`` is exposed for launch-count tracing.  Taking
+    spec/tables separately (not a Schedule) lets the wire-formats row
+    re-run one schedule's tables under a swapped-wire spec."""
     cfg = executor.ExecConfig(impl=impl)
-    tables = executor.schedule_tables(sched)
-    total, hq, d = q.shape
+    total, hq, d = key.shape
 
     def attn(q, k, v):
         F = total // tpw
@@ -59,33 +67,46 @@ def bench(impl: str, sched, mesh, tpw, q, k, v, key, iters: int):
             return x.reshape(F, tpw, x.shape[-2], x.shape[-1])
 
         o = executor.fcp_attention(sh(q), sh(k), sh(v), tables,
-                                   spec=sched.spec, mesh=mesh,
+                                   spec=spec, mesh=mesh,
                                    cp_axis="data", head_axis=None, cfg=cfg)
         return o.reshape(total, hq, d)
 
     def loss(q, k, v):
         return jnp.sum(attn(q, k, v) * key)
 
-    step = jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+    return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2))), attn
+
+
+def time_step(step, q, k, v, iters: int):
+    """Warmup-compile, then median-time ``iters`` executions.  Returns
+    ``(last_output, compile_s, median_s)`` — the single timing protocol
+    every benchmark row in this module uses."""
     t0 = time.perf_counter()
     out = step(q, k, v)
     jax.block_until_ready(out)
     compile_s = time.perf_counter() - t0
-
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
         out = step(q, k, v)
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
-    med = float(np.median(times))
+    return out, compile_s, float(np.median(times))
+
+
+def bench(impl: str, sched, mesh, tpw, q, k, v, key, iters: int):
+    step, attn = make_step(impl, sched.spec,
+                           executor.schedule_tables(sched), mesh, tpw,
+                           key)
+    _, compile_s, med = time_step(step, q, k, v, iters)
     launches = ops.count_attention_launches(attn, q, k, v)
+    fused = executor.ExecConfig(impl=impl).fused
     return {
         "fwd_bwd_ms": med * 1e3,
-        "tokens_per_sec": total / med,
+        "tokens_per_sec": q.shape[0] / med,
         "compile_s": compile_s,
         "attention_launches_per_worker_per_layer":
-            launches["fused" if cfg.fused else "step"],
+            launches["fused" if fused else "step"],
     }
 
 
@@ -151,6 +172,84 @@ def swa_vs_causal_section(iters: int) -> dict:
         out[name]["comm_edges"] = len(sched.comm_edges)
     out["speedup_swa_vs_causal"] = (out["causal"]["fwd_bwd_ms"]
                                     / out["swa"]["fwd_bwd_ms"])
+    return out
+
+
+def wire_formats_section(iters: int) -> dict:
+    """Quantized wire transport row: per-phase comm-bytes breakdown
+    (reshuffle / rounds / restore) per wire format, measured step time,
+    recompile accounting, and numerics vs the f32 wire.
+
+    Bytes are deterministic host accounting over the planned schedule
+    (``cost_model.spec_wire_bytes`` — includes trash padding, so the
+    bytes-aware pad cap is priced honestly); the gated ``rounds`` ratio
+    is each format's own planned schedule vs the f32 plan of the same
+    batch.  Numerics (out/grad error vs f32) run on the *same* schedule
+    with only the spec's wire swapped, isolating pure transport error
+    from planning differences.
+    """
+    n_workers = 8
+    tpw, bs, hq, kvh, d = 512, 128, 8, 1, 64
+    seqlens = real_world_batch(n_workers * tpw, seed=1)
+    mesh = jax.make_mesh((n_workers,), ("data",))
+    rng = np.random.default_rng(0)
+    total = n_workers * tpw
+    q = jnp.asarray(rng.normal(size=(total, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(total, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(total, kvh, d)), jnp.float32)
+    key = jnp.asarray(rng.normal(size=(total, hq, d)), jnp.float32)
+
+    out = {"config": {"n_workers": n_workers, "tokens_per_worker": tpw,
+                      "block_size": bs, "heads": hq, "kv_heads": kvh,
+                      "head_dim": d, "coalesce": 16, "seqlens": seqlens}}
+    sched32 = None
+    grads32 = None
+    for fmt in ("f32", "bf16", "int8"):
+        sched = make_schedule(seqlens, n_workers, tpw, bs, n_q_heads=hq,
+                              n_kv_heads=kvh, head_dim=d, mask=True,
+                              coalesce=16, wire=fmt)
+        row = {"comm_bytes": cm.spec_wire_bytes(sched.spec, hq, kvh, d)}
+        step, _ = make_step("fused_xla", sched.spec,
+                            executor.schedule_tables(sched), mesh, tpw,
+                            key)
+        outv, row["compile_s"], med = time_step(step, q, k, v, iters)
+        row["fwd_bwd_ms"] = med * 1e3
+        # warmup = the first call; every timed step must reuse it
+        row["recompiles_after_warmup"] = int(step._cache_size()) - 1
+        assert row["recompiles_after_warmup"] == 0, \
+            f"{fmt}: executor recompiled after warmup"
+
+        if fmt == "f32":
+            sched32 = sched
+            grads32 = [np.asarray(g) for g in outv[1]]
+        else:
+            # numerics on the SAME schedule (only the wire swapped):
+            # pure transport error, no planning-difference noise
+            spec_w = dataclasses.replace(sched32.spec,
+                                         wire=sched.spec.wire)
+            step_w, _ = make_step("fused_xla", spec_w,
+                                  executor.schedule_tables(sched32),
+                                  mesh, tpw, key)
+            _loss_w, grads_w = step_w(q, k, v)
+            gerr = max(
+                np.abs(np.asarray(a) - b).max() / max(1.0, np.abs(b).max())
+                for a, b in zip(grads_w, grads32))
+            row["grad_err_vs_f32"] = float(gerr)
+            row["round_bytes_ratio"] = (
+                row["comm_bytes"]["rounds"]
+                / out["f32"]["comm_bytes"]["rounds"])
+            row["total_bytes_ratio"] = (
+                row["comm_bytes"]["total"]
+                / out["f32"]["comm_bytes"]["total"])
+        out[fmt] = row
+
+    # the tentpole acceptance (limits shared with scripts/check_bench —
+    # the in-bench asserts and the CI gate can never disagree)
+    for fmt in ("bf16", "int8"):
+        lim = WIRE_LIMITS[f"{fmt}_round_bytes_ratio"]
+        assert out[fmt]["round_bytes_ratio"] <= lim, (fmt, lim, out[fmt])
+        lim = WIRE_LIMITS[f"{fmt}_grad_err"]
+        assert out[fmt]["grad_err_vs_f32"] <= lim, (fmt, lim, out[fmt])
     return out
 
 
@@ -225,6 +324,17 @@ def main(argv=None):
     result["speedup_fused_vs_per_step"] = (
         result["per_step"]["fwd_bwd_ms"] / result["fused"]["fwd_bwd_ms"])
     print(f"fused speedup: {result['speedup_fused_vs_per_step']:.2f}x")
+
+    print("benchmarking wire_formats (quantized transport) ...",
+          flush=True)
+    result["wire_formats"] = wire_formats_section(args.iters)
+    wf = result["wire_formats"]
+    for fmt in ("bf16", "int8"):
+        print(f"  {fmt}: round bytes ratio "
+              f"{wf[fmt]['round_bytes_ratio']:.3f}, grad err vs f32 "
+              f"{wf[fmt]['grad_err_vs_f32']:.2e}, "
+              f"{wf[fmt]['fwd_bwd_ms']:.1f} ms/step, "
+              f"{wf[fmt]['recompiles_after_warmup']} recompiles")
 
     print("benchmarking swa_vs_causal (mask-aware scheduling) ...",
           flush=True)

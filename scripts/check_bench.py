@@ -12,7 +12,10 @@ fails on regression:
 * dimensionless metrics (fused speedup, plan-cache hit rate, plan
   amortization) are compared raw;
 * exact gates (executor recompiles after warmup) must not exceed the
-  baseline at all.
+  baseline at all;
+* absolute gates (quantized-wire bytes ratios, wire grad-error
+  ceilings, wire recompile counts) are contracts checked on the fresh
+  value alone — they hold regardless of what the baseline recorded.
 
 Usage::
 
@@ -28,6 +31,18 @@ import pathlib
 import sys
 
 
+# Absolute wire-format contracts (ISSUE 5 acceptance).  Single source:
+# benchmarks/bench_executor.py imports these for its in-bench asserts,
+# so the bench and the CI gate can never disagree; README/CONTRIBUTING
+# quote the same numbers.
+WIRE_LIMITS = {
+    "bf16_round_bytes_ratio": 0.55,
+    "int8_round_bytes_ratio": 0.35,
+    "bf16_grad_err": 1e-2,
+    "int8_grad_err": 3e-2,
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class Gate:
     path: str                  # dotted path into the benchmark JSON
@@ -35,6 +50,9 @@ class Gate:
     normalize: bool = False    # scale by the calibration ratio
     rel_tol: float | None = None   # override the global tolerance
     exact: bool = False        # fail on ANY worsening (counters)
+    limit: float | None = None  # ABSOLUTE ceiling/floor (per direction),
+    #                             checked on the fresh value alone — the
+    #                             contract holds regardless of baseline
 
 
 GATES: dict[str, list[Gate]] = {
@@ -52,6 +70,23 @@ GATES: dict[str, list[Gate]] = {
              exact=True),
         Gate("swa_vs_causal.swa.fwd_bwd_ms", lower_is_better=True,
              normalize=True),
+        # quantized wire transport: the round comm-bytes ratio vs the
+        # f32 wire is deterministic host accounting over the planned
+        # schedules (including trash padding), and the grad error vs
+        # the f32 wire on the same schedule is the documented numerics
+        # ceiling — both are ABSOLUTE contracts, not baseline-relative
+        Gate("wire_formats.bf16.round_bytes_ratio", lower_is_better=True,
+             limit=WIRE_LIMITS["bf16_round_bytes_ratio"]),
+        Gate("wire_formats.int8.round_bytes_ratio", lower_is_better=True,
+             limit=WIRE_LIMITS["int8_round_bytes_ratio"]),
+        Gate("wire_formats.bf16.grad_err_vs_f32", lower_is_better=True,
+             limit=WIRE_LIMITS["bf16_grad_err"]),
+        Gate("wire_formats.int8.grad_err_vs_f32", lower_is_better=True,
+             limit=WIRE_LIMITS["int8_grad_err"]),
+        Gate("wire_formats.bf16.recompiles_after_warmup",
+             lower_is_better=True, limit=0.0),
+        Gate("wire_formats.int8.recompiles_after_warmup",
+             lower_is_better=True, limit=0.0),
     ],
     "BENCH_planner.json": [
         Gate("steady_state.plan_cold_ms_median", lower_is_better=True,
@@ -80,6 +115,22 @@ def check_file(name: str, base: dict, fresh: dict, rel_tol: float
     cal_f = fresh.get("calibration_ms")
     for g in GATES[name]:
         b, f = dig(base, g.path), dig(fresh, g.path)
+        if g.limit is not None:
+            # absolute gate: evaluated on the fresh value alone
+            if f is None:
+                failures.append(f"{name}:{g.path}: missing from fresh run")
+                continue
+            f = float(f)
+            ok = f <= g.limit if g.lower_is_better else f >= g.limit
+            tag = "OK " if ok else "FAIL"
+            cmp = "<=" if g.lower_is_better else ">="
+            print(f"  [{tag}] {name}:{g.path}: fresh {f:.4g} "
+                  f"[absolute limit {cmp} {g.limit:.4g}]")
+            if not ok:
+                failures.append(
+                    f"{name}:{g.path}: {f:.4g} violates absolute limit "
+                    f"{cmp} {g.limit:.4g}")
+            continue
         if b is None:
             print(f"  {name}:{g.path}: no baseline value — skipped")
             continue

@@ -151,6 +151,18 @@ class ParallelConfig:
     # run-wide attention-mask family ("causal" | "full" | "swa:W" |
     # "chunked:C"); models with a per-layer attn_mask_pattern override it
     attn_mask: str = "causal"
+    # wire format of every FCP ppermute payload ("f32" passthrough |
+    # "bf16" | "int8" with per-(block, head) scales; runtime/wire.py).
+    # Folded into StaticSpec and every plan-cache key, and preserved
+    # across elastic replans like the other schedule knobs.
+    comm_dtype: str = "f32"
+    # itemsize of the compute dtype the payloads ship in UNENCODED (the
+    # train driver sets it from ModelConfig.param_dtype): prices the
+    # wire's byte-aware planning in real bytes — under bf16 compute
+    # (2) the bf16 wire is a no-op while int8 still halves traffic.
+    # Rides ParallelConfig so elastic replans reprice identically and
+    # re-hit the train pipeline's plan-cache entries.
+    in_dtype_bytes: float = 4.0
     locality: str = "auto"        # affinity-aware LPT: "auto" | on | off
     chunked_loss: bool = False    # CE without full logits (§Perf #3)
     attn_out_bf16: bool = False   # executor restores o in bf16 (§Perf #4)

@@ -29,6 +29,7 @@ from typing import Sequence
 import numpy as np
 
 from ..masks import MaskSpec, coerce_mask
+from ..runtime.wire import WIRE_BF16, WireFormat, coerce_wire
 from .blocks import PAD_SEGMENT, Block, BlockedBatch
 
 
@@ -263,6 +264,102 @@ def total_attention_flops(batch: BlockedBatch, n_q_heads: int,
 
 
 # --------------------------------------------------------------------------
+# wire-bytes accounting (quantized wire formats, runtime/wire.py)
+# --------------------------------------------------------------------------
+#
+# The planner prices communication in WIRE BYTES, not block counts: a
+# block shipped bf16 costs half a block shipped f32, and int8 a quarter
+# (plus a per-(row, head) f32 scale side-band).  These helpers are the
+# single source of those numbers; the coalescer pad cap, the
+# ``locality="auto"`` decision and the distributor's locality tolerance
+# all scale by :func:`wire_comm_scale`.  ``in_bytes`` is the itemsize
+# of the compute dtype the payloads would ship unencoded (2 under bf16
+# training, where the bf16 wire is a no-op and int8 halves traffic —
+# the pricing must follow the real bytes, not assume f32 compute).
+
+def kv_wire_block_bytes(wire: WireFormat, block_size: int,
+                        n_kv_heads: int, head_dim: int,
+                        in_bytes: float = 4.0) -> float:
+    """Wire bytes of one K+V block (the coalesced-round payload unit:
+    2 * n_kv_heads scale groups of block_size * head_dim values)."""
+    wire = coerce_wire(wire)
+    return 2 * n_kv_heads * wire.group_bytes(block_size * head_dim,
+                                             in_bytes)
+
+
+def qkv_wire_block_bytes(wire: WireFormat, block_size: int, n_q_heads: int,
+                         n_kv_heads: int, head_dim: int,
+                         in_bytes: float = 4.0) -> float:
+    """Wire bytes of one reshuffle payload block (Q, K and V rows)."""
+    wire = coerce_wire(wire)
+    return ((n_q_heads + 2 * n_kv_heads)
+            * wire.group_bytes(block_size * head_dim, in_bytes))
+
+
+def o_wire_block_bytes(wire: WireFormat, block_size: int, n_q_heads: int,
+                       head_dim: int, in_bytes: float = 4.0) -> float:
+    """Wire bytes of one restored output block."""
+    wire = coerce_wire(wire)
+    return n_q_heads * wire.group_bytes(block_size * head_dim, in_bytes)
+
+
+def wire_comm_scale(wire: WireFormat, block_size: int = 4096,
+                    head_dim: int = 128,
+                    in_bytes: float = 4.0) -> float:
+    """Relative per-block wire cost vs the unencoded payload (<= 1),
+    used to weigh comm terms in the planning heuristics."""
+    return coerce_wire(wire).comm_scale(block_size * head_dim, in_bytes)
+
+
+def wire_pad_cap(wire: WireFormat, base_cap: float,
+                 max_cap: float = 3.0, in_bytes: float = 4.0,
+                 block_size: int = 4096, head_dim: int = 128) -> float:
+    """Bytes-aware coalescer pad cap.
+
+    The pad cap bounds how much trash padding a merged ppermute group
+    may ship relative to its real payload; the *benefit* of merging
+    (per-message launch amortization) is format-independent while the
+    *cost* (padded bytes) scales with the wire format, so a cheaper wire
+    affords proportionally more padding for the same byte overhead:
+    ``1 + (base - 1) / comm_scale``, clamped to ``max_cap`` so int8
+    cannot justify unbounded trash rows.  The passthrough wire returns
+    ``base_cap`` unchanged.
+    """
+    scale = wire_comm_scale(wire, block_size, head_dim, in_bytes=in_bytes)
+    return min(max_cap, 1.0 + (base_cap - 1.0) / max(scale, 1e-9))
+
+
+def spec_wire_bytes(spec, n_q_heads: int, n_kv_heads: int, head_dim: int,
+                    wire: WireFormat | None = None,
+                    in_bytes: float = 4.0) -> dict[str, float]:
+    """Per-phase wire bytes a schedule actually ships, including trash
+    padding: each ppermute group moves ``len(perm) * rows`` payload rows
+    regardless of how many carry real blocks.
+
+    Returns ``{"reshuffle", "rounds", "restore", "total"}`` — the
+    benchmark's comm-bytes breakdown (deterministic host accounting, so
+    wire-format wins are attributable and CI-gateable).
+    """
+    wire = coerce_wire(spec.wire if wire is None else wire)
+    bs = spec.block_size
+
+    def rows(rounds) -> int:
+        return sum(len(g.perm) * g.rows for r in rounds for g in r.groups)
+
+    resh = rows(spec.resh_rounds)
+    out = {
+        "reshuffle": resh * qkv_wire_block_bytes(
+            wire, bs, n_q_heads, n_kv_heads, head_dim, in_bytes),
+        "rounds": rows(spec.comm_rounds) * kv_wire_block_bytes(
+            wire, bs, n_kv_heads, head_dim, in_bytes),
+        "restore": resh * o_wire_block_bytes(
+            wire, bs, n_q_heads, head_dim, in_bytes),
+    }
+    out["total"] = sum(out.values())
+    return out
+
+
+# --------------------------------------------------------------------------
 # analytic execution-time model (paper §3.3 + ablation components)
 # --------------------------------------------------------------------------
 
@@ -307,6 +404,7 @@ def simulate_attention_module(
         reshuffle_moved_blocks: int | None = None,
         backward: bool = False,
         seed: int = 0,
+        wire: WireFormat = WIRE_BF16,
 ) -> SimResult:
     """Analytic time of the attention module for a scheduled batch.
 
@@ -318,9 +416,12 @@ def simulate_attention_module(
     the layout all-to-all as exposed time.
     """
     mask = coerce_mask(mask)
+    wire = coerce_wire(wire)
     rng = np.random.default_rng(seed)
     bs = batch.block_size
-    kv_block_bytes = 2 * bs * n_kv_heads * head_dim * 2  # K+V bf16
+    # comm terms are WIRE BYTES (default bf16, the paper's transport
+    # precision — the legacy constant), not block counts
+    kv_block_bytes = kv_wire_block_bytes(wire, bs, n_kv_heads, head_dim)
 
     comp = np.zeros(n_workers)
     comm_in = np.zeros(n_workers)
@@ -373,8 +474,8 @@ def simulate_attention_module(
         stream_owner = np.minimum(np.arange(batch.n_blocks) // slots,
                                   n_workers - 1)
         reshuffle_moved_blocks = int(np.sum(stream_owner != assignment))
-    resh_bytes = reshuffle_moved_blocks * (
-        2 * bs * (n_q_heads + 2 * n_kv_heads) * head_dim)  # q,k,v bf16
+    resh_bytes = reshuffle_moved_blocks * qkv_wire_block_bytes(
+        wire, bs, n_q_heads, n_kv_heads, head_dim)
     resh_time_total = resh_bytes / (hw.link_bandwidth * max(n_workers, 1))
 
     if flags.pipelining:

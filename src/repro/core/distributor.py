@@ -42,12 +42,19 @@ def assign_blocks(
         speeds: np.ndarray | None = None,
         locality_hint: np.ndarray | None = None,
         locality_tol: float = 0.05,
+        comm_scale: float = 1.0,
 ) -> AssignmentResult:
     """Algorithm 1: greedy load-balanced assignment.
 
     ``locality_hint[i]`` (optional) is the worker that already holds block
     ``i`` in the incoming layout; it wins ties within ``locality_tol`` of
     the best load.
+
+    ``comm_scale`` is the wire-bytes cost of communication relative to
+    the f32 wire (``cost_model.wire_comm_scale``): locality swaps trade
+    balance for reshuffle *bytes*, so a cheaper wire shrinks the load
+    drift the refinement may spend per byte saved — at ``comm_scale=1``
+    (f32) the objective is unchanged.
     """
     compute = np.asarray(compute, dtype=np.float64)
     memory = np.asarray(memory, dtype=np.float64)
@@ -88,8 +95,8 @@ def assign_blocks(
 
     if locality_hint is not None:
         owner = refine_locality(owner, compute, locality_hint,
-                                tol=locality_tol * float(np.sum(compute))
-                                / n_workers)
+                                tol=locality_tol * float(comm_scale)
+                                * float(np.sum(compute)) / n_workers)
         w_mem = np.bincount(owner, weights=memory, minlength=n_workers)
         w_comp = np.bincount(owner, weights=compute, minlength=n_workers)
 

@@ -18,7 +18,13 @@ Runs a host-built :class:`~repro.core.schedule.Schedule` inside
   per run); the per-step impls (``pallas`` / ``xla``) run one
   ``block_attention`` + merge per (q-slot, kv-slot) step;
 * received blocks land in a live-range-colored buffer (planner §4.2),
-  keeping receive memory at max-live depth.
+  keeping receive memory at max-live depth;
+* every ppermute payload travels in the schedule's **wire format**
+  (``StaticSpec.wire`` → ``runtime/wire.ship``): encoded — f32
+  passthrough / bf16 / int8 with per-(block, head) scales — right
+  before the collective and decoded into the compute dtype on arrival,
+  so kernels and merge math are untouched and only the wire is lossy
+  (forward and backward alike; f32 stays bit-exact).
 
 Everything is differentiable: the backward pass reverses the permutations
 automatically (ppermute transpose) — FCP's backward is the same schedule
@@ -44,7 +50,13 @@ from jax.sharding import PartitionSpec as P
 from ..compat import shard_map
 from ..kernels import ops
 from ..kernels.ref import NEG_INF
+from ..runtime import wire as wirelib
 from .schedule import PlanArrays, Schedule, StaticSpec
+
+# every ppermute payload is [rows, heads, block, head_dim]; quantized
+# wire formats carry one scale per (row, head) — per-(block, kv-head)
+# for the KV stacks — so an outlier head cannot wash out a block
+_SCALE_AXES = (-2, -1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +110,15 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
     tpw = slots * bs
     hq, d = q.shape[2], q.shape[3]
     kh = k.shape[2]
+    fmt = spec.wire
+
+    def ship(payload, perm):
+        # encode -> ppermute -> decode (runtime/wire.py): the payload
+        # travels in the schedule's wire format and arrives back in its
+        # compute dtype; f32 is a bit-exact passthrough of ppermute
+        return wirelib.ship(payload, tuple(perm), cp_axis, fmt,
+                            _SCALE_AXES)
+
     # blk_* are replicated (shared mask metadata); the rest are per-worker
     t = {k_: (v_ if k_.startswith("blk_") else v_[0])
          for k_, v_ in t.items()}
@@ -128,7 +149,7 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
                 _gather_rows(q_ut, idx),
                 _gather_rows(k_ut, idx),
                 _gather_rows(v_ut, idx)], axis=1)   # [rows, hq+2kh, ...]
-            recv = jax.lax.ppermute(payload, cp_axis, list(g.perm))
+            recv = ship(payload, g.perm)
             # one scatter per group (idle rows all land on the trash row)
             didx = dst[off:off + g.rows]
             qs = qs.at[didx].set(recv[:, :hq])
@@ -172,9 +193,7 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
                 payload = jnp.concatenate(
                     [_gather_rows(kxt, idx), _gather_rows(vxt, idx)],
                     axis=1)                         # [rows, 2kh, bs, d]
-                arrivals.append(
-                    (off, g,
-                     jax.lax.ppermute(payload, cp_axis, list(g.perm))))
+                arrivals.append((off, g, ship(payload, g.perm)))
                 off += g.rows
         lo, hi = spec.run_starts[r], spec.run_starts[r + 1]
         if hi > lo and cfg.fused:
@@ -237,9 +256,9 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
         off = 0
         for g in spec.resh_rounds[r].groups:
             # reversed partial permutation is a partial permutation
-            perm = [(d_, s_) for s_, d_ in g.perm]
+            perm = tuple((d_, s_) for s_, d_ in g.perm)
             payload = _gather_rows(acc_o, snd[off:off + g.rows])
-            recv = jax.lax.ppermute(payload, cp_axis, perm)
+            recv = ship(payload, perm)
             o_u = o_u.at[dst[off:off + g.rows]].set(recv)
             off += g.rows
     o = o_u[:slots].transpose(0, 2, 1, 3).reshape(tpw, hq, d)

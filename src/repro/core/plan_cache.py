@@ -37,6 +37,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Sequence
 
 from ..masks import coerce_mask
+from ..runtime.wire import coerce_wire
 from .blocks import bucket_length, length_bucket_edges
 from .schedule import Schedule, StaticSpec
 
@@ -104,19 +105,26 @@ def plan_key(seqlens: Sequence[int], n_workers: int,
              mask=True, coalesce: int = 1,
              locality: bool | str = "auto",
              alpha: float = 1.0, beta: float = 1.0,
-             speeds=None, extra: tuple = ()) -> tuple:
+             speeds=None, wire="f32", in_dtype_bytes: float = 4.0,
+             extra: tuple = ()) -> tuple:
     """Hashable key capturing every input the planner is deterministic
     in: the (canonical) block layout plus all scheduling knobs.
 
     The *full* :class:`~repro.masks.MaskSpec` identity is folded in —
     a bare ``causal`` bool cannot distinguish window sizes or chunk
     widths, and cached plans must never cross mask families (their
-    dependency sets and step tables differ).  ``extra`` folds in
-    caller-side context (e.g. model head counts)."""
+    dependency sets and step tables differ).  The
+    :class:`~repro.runtime.wire.WireFormat` is folded for the same
+    reason: it changes both the planner's byte-aware decisions (pad
+    cap, locality, distributor tolerance) and the executor's
+    encode/decode graph, so cached plans must never cross wire formats
+    (nor compute-dtype itemsizes, which reprice those decisions).
+    ``extra`` folds in caller-side context (e.g. model head counts)."""
     sp = None if speeds is None else tuple(float(s) for s in speeds)
     return (tuple(int(L) for L in seqlens), int(n_workers),
             int(tokens_per_worker), int(block_size),
             coerce_mask(mask).key(),
+            coerce_wire(wire).key() + (float(in_dtype_bytes),),
             int(coalesce), str(locality), float(alpha), float(beta), sp,
             tuple(extra))
 

@@ -36,6 +36,7 @@ from typing import Sequence
 import numpy as np
 
 from ..masks import MaskSpec, coerce_mask
+from ..runtime.wire import WIRE_F32, WireFormat, coerce_wire
 from . import blocks as blockslib
 from . import cost_model as cm
 from . import distributor as dist
@@ -91,6 +92,11 @@ class StaticSpec:
     # tables; runs may be empty.  Run r < n_rounds overlaps round r's
     # ppermute; the tail run consumes the last arrivals.
     run_starts: tuple[int, ...] = (0, 0)
+    # wire format of every ppermute payload (reshuffle / rounds /
+    # restore; runtime/wire.py).  Part of the spec: the executor's
+    # encode/decode graph differs per format, so schedules — and hence
+    # jit cache entries and plan-cache keys — never cross formats.
+    wire: WireFormat = WIRE_F32
 
     @property
     def n_runs(self) -> int:
@@ -192,19 +198,22 @@ class Schedule:
         return (self.spec,)
 
 
-def _coalesced_rounds(matchings: list[list[plannerlib.Edge]], degree: int
+def _coalesced_rounds(matchings: list[list[plannerlib.Edge]], degree: int,
+                      pad_cap: float = plannerlib.COALESCE_PAD_CAP
                       ) -> tuple[list[list[list[plannerlib.Edge]]],
                                  list[list[tuple]],
                                  tuple[CommRound, ...]]:
     """Window ``matchings`` into coalesced rounds of <= ``degree`` and
-    partition each window's edges into ppermute groups.
+    partition each window's edges into ppermute groups (``pad_cap``
+    bounds group padding — bytes-aware, see ``cost_model.wire_pad_cap``).
 
     Returns ``(windows, groupings, rounds)``: ``groupings[r]`` is the
     planner's per-round group list (with edge assignments, used to build
     the plan tables); ``rounds`` is the static executor view.
     """
     windows = plannerlib.coalesce_matchings(matchings, degree)
-    groupings = [plannerlib.group_coalesced_round(win) for win in windows]
+    groupings = [plannerlib.group_coalesced_round(win, pad_cap=pad_cap)
+                 for win in windows]
     rounds = tuple(
         CommRound(groups=tuple(
             CommGroup(perm=perm, rows=rows)
@@ -229,8 +238,17 @@ def make_schedule(
         locality: bool | str = "auto",
         alpha: float = 1.0,
         beta: float = 1.0,
+        wire: WireFormat | str = WIRE_F32,      # ppermute wire format
+        in_dtype_bytes: float = 4.0,            # compute-dtype itemsize
 ) -> Schedule:
     mask = coerce_mask(mask)
+    wire = coerce_wire(wire)
+    # relative wire cost of a shipped value vs the UNENCODED payload
+    # (``in_dtype_bytes`` = itemsize of the q/k/v compute dtype — 2
+    # under bf16 training, where the bf16 wire saves nothing): weighs
+    # every comm-vs-balance tradeoff below in real bytes
+    comm_scale = cm.wire_comm_scale(wire, block_size, head_dim,
+                                    in_bytes=in_dtype_bytes)
     if tokens_per_worker % block_size != 0:
         raise ValueError("tokens_per_worker must be a multiple of block_size")
     if locality == "auto":
@@ -247,7 +265,12 @@ def make_schedule(
             horizon = min(horizon, mask.window)
         elif mask.kind == "chunked":
             horizon = min(horizon, mask.chunk)
-        locality = horizon <= tokens_per_worker
+        # bytes-aware: what locality prunes is comm *bytes*, so a
+        # cheaper wire shrinks its upside while the imbalance risk is
+        # unchanged — the horizon must fit a proportionally smaller
+        # budget before stream placement beats balance-first (f32
+        # reproduces the legacy horizon <= tokens_per_worker rule)
+        locality = horizon <= tokens_per_worker * comm_scale
     slots = tokens_per_worker // block_size
     n_tokens = n_workers * tokens_per_worker
     batch = blockslib.shard_stream(seqlens, block_size, n_tokens)
@@ -262,7 +285,8 @@ def make_schedule(
         res = dist.assign_blocks(
             costs, mems, n_workers, mem_limit=float(tokens_per_worker),
             alpha=alpha, beta=beta, delta=0.0, speeds=speeds,
-            locality_hint=stream_owner if locality else None)
+            locality_hint=stream_owner if locality else None,
+            comm_scale=comm_scale)
         assignment = res.owner
     assignment = np.asarray(assignment, dtype=np.int32)
 
@@ -278,12 +302,17 @@ def make_schedule(
 
     # ---- communication plan ------------------------------------------------
     coalesce = max(1, int(coalesce))
+    # same geometry as comm_scale above: the coalescer and the locality
+    # decision must price the wire identically
+    pad_cap = cm.wire_pad_cap(wire, plannerlib.COALESCE_PAD_CAP,
+                              in_bytes=in_dtype_bytes,
+                              block_size=block_size, head_dim=head_dim)
     comm_edges = plannerlib.build_comm_edges(assignment, deps)
     matchings = plannerlib.decompose_matchings(comm_edges, n_workers)
     n_matchings = len(matchings)
     # bottom-up coalescer (§4.2): C consecutive matchings -> one round
     windows, comm_groupings, comm_rounds = _coalesced_rounds(
-        matchings, coalesce)
+        matchings, coalesce, pad_cap)
     n_rounds = len(windows)
     # arrival (coalesced) round of each remote block at each worker, and
     # the per-round arrival lists the receive-buffer allocator colors
@@ -358,7 +387,7 @@ def make_schedule(
     resh_edges = plannerlib.build_reshuffle_edges(stream_owner, assignment)
     resh_matchings = plannerlib.decompose_matchings(resh_edges, n_workers)
     resh_windows, resh_groupings, resh_rounds = _coalesced_rounds(
-        resh_matchings, coalesce)
+        resh_matchings, coalesce, pad_cap)
     n_resh = len(resh_windows)
 
     spec = StaticSpec(
@@ -366,7 +395,7 @@ def make_schedule(
         ext_slots=ext, coalesce=coalesce, n_matchings=n_matchings,
         n_rounds=n_rounds, n_steps=n_steps, n_resh_rounds=n_resh,
         comm_rounds=comm_rounds, resh_rounds=resh_rounds, mask=mask,
-        run_starts=run_starts)
+        run_starts=run_starts, wire=wire)
 
     arrays = _build_arrays(batch, spec, assignment, stream_owner, slot_of,
                            comm_groupings, resh_groupings, run_sched,

@@ -65,6 +65,15 @@ def layer_mask_specs(cfg: ModelConfig, pcfg: ParallelConfig
     return (coerce_mask(pcfg.attn_mask),) * n
 
 
+def _param_dtype_bytes(cfg: ModelConfig) -> int:
+    """Itemsize of the compute dtype the executor's payloads ship in
+    (q/k/v inherit ``param_dtype``) — prices the wire in real bytes:
+    under bf16 training the bf16 wire is a no-op, int8 still halves.
+    The driver folds this into ``ParallelConfig.in_dtype_bytes`` so
+    elastic replans reprice identically."""
+    return int(jnp.dtype(cfg.param_dtype).itemsize)
+
+
 def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
                    n_cp: int, tokens_per_worker: int,
                    speeds: np.ndarray | None = None,
@@ -75,7 +84,8 @@ def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
         seqlens, n_cp, tokens_per_worker, pcfg.block_size,
         n_q_heads=max(nh, 1), n_kv_heads=max(nkv, 1),
         head_dim=max(cfg.head_dim, 1), mask=mask, speeds=speeds,
-        coalesce=pcfg.coalesce,
+        coalesce=pcfg.coalesce, wire=pcfg.comm_dtype,
+        in_dtype_bytes=pcfg.in_dtype_bytes,
         locality={"auto": "auto", "on": True, "off": False}.get(
             str(pcfg.locality), pcfg.locality))
 
@@ -89,8 +99,9 @@ def schedule_plan_key(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
     return pc.plan_key(
         seqlens, n_cp, tokens_per_worker, pcfg.block_size,
         mask=mask, coalesce=pcfg.coalesce, locality=pcfg.locality,
-        speeds=speeds, extra=(max(nh, 1), max(nkv, 1),
-                              max(cfg.head_dim, 1)))
+        speeds=speeds, wire=pcfg.comm_dtype,
+        in_dtype_bytes=pcfg.in_dtype_bytes,
+        extra=(max(nh, 1), max(nkv, 1), max(cfg.head_dim, 1)))
 
 
 @dataclasses.dataclass
@@ -209,6 +220,12 @@ def main(argv=None):
                         " FCP schedule (per-layer-group scheduling)")
     p.add_argument("--coalesce", type=int, default=16,
                    help="bottom-up coalescer degree C (1 = off)")
+    p.add_argument("--comm-dtype", default="f32",
+                   choices=["f32", "bf16", "int8"],
+                   help="wire format of every FCP ppermute payload:"
+                        " f32 = exact passthrough, bf16 = ~2x fewer"
+                        " comm bytes, int8 = ~3.7x with per-(block,"
+                        " head) scales (bounded activation/grad error)")
     p.add_argument("--plan-buckets", type=int, default=0,
                    help="canonical length-bucket edges per doubling"
                         " (0 = raw lengths; >0 bounds the schedule-key"
@@ -252,6 +269,8 @@ def main(argv=None):
                           attn_block_k=args.attn_block_k,
                           attn_interpret=args.attn_interpret,
                           attn_mask=args.attn_mask,
+                          comm_dtype=args.comm_dtype,
+                          in_dtype_bytes=_param_dtype_bytes(cfg),
                           plan_buckets=args.plan_buckets,
                           plan_cache_size=args.plan_cache_size,
                           plan_ahead=args.plan_ahead)

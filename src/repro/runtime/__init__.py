@@ -1,1 +1,11 @@
-from . import compression, elastic, fault_tolerance
+import importlib
+
+from . import compression, fault_tolerance, wire
+
+
+def __getattr__(name):
+    # lazy: elastic imports core.schedule, which imports runtime.wire —
+    # an eager import here would close that cycle during core's import
+    if name == "elastic":
+        return importlib.import_module(".elastic", __name__)
+    raise AttributeError(name)

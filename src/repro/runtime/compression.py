@@ -2,10 +2,17 @@
 
 At 2+ pods the gradient all-reduce crosses the data-center network
 (~25 GB/s vs 4x50 GB/s ICI), so halving its bytes matters.  We compress
-f32 gradients to bf16 *with an error-feedback residual*: the quantization
-error of step t is added back into step t+1's gradient before
-quantization, so the bias does not accumulate (classic EF-SGD; drift is
-bounded instead of growing linearly).
+f32 gradients *with an error-feedback residual*: the quantization error
+of step t is added back into step t+1's gradient before quantization, so
+the bias does not accumulate (classic EF-SGD; drift is bounded instead
+of growing linearly).
+
+Quantization itself is the shared wire codec (:mod:`repro.runtime.wire`)
+— the same bf16 truncation the FCP executor applies at its ppermute
+boundaries, so there is exactly one quantization implementation in the
+repo.  Only the scale-free formats (``f32``/``bf16``) are reducible:
+per-group int8 scales cannot be summed by an all-reduce, so the DCN
+path rejects ``int8`` explicitly.
 
 On this single-host container the quantize -> (all-)reduce -> dequantize
 path wraps the gradient tree itself — numerically identical to wrapping
@@ -18,26 +25,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import wire
+
 
 def init_residuals(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def compress_grads(grads, residuals):
-    """Returns (compressed bf16 grads ready for the cross-pod reduction,
-    new residuals)."""
+def compress_grads(grads, residuals, fmt: wire.WireFormat = wire.WIRE_BF16):
+    """Returns (compressed grads ready for the cross-pod reduction, new
+    residuals).  ``fmt`` must be a scale-free wire format."""
+    fmt = wire.coerce_wire(fmt)
+    if fmt.scale_bytes:
+        raise ValueError(
+            f"EF-DCN compression needs a reducible (scale-free) wire "
+            f"format, got {fmt} — per-group scales cannot be all-reduced")
 
     def one(g, r):
         g32 = g.astype(jnp.float32) + r
-        gc = g32.astype(jnp.bfloat16)
-        return gc, g32 - gc.astype(jnp.float32)
+        gc, _ = wire.encode(g32, fmt)
+        return gc, g32 - wire.decode(gc, None, fmt, jnp.float32)
 
-    flat_g, treedef = jax.tree.flatten(grads)
-    flat_r = jax.tree.leaves(residuals)
-    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
-    comp = jax.tree.unflatten(treedef, [o[0] for o in out])
-    res = jax.tree.unflatten(treedef, [o[1] for o in out])
-    return comp, res
+    pairs = jax.tree.map(one, grads, residuals)
+    return jax.tree.transpose(jax.tree.structure(grads),
+                              jax.tree.structure((0, 0)), pairs)
 
 
 def decompress_grads(comp):

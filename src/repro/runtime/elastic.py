@@ -28,6 +28,7 @@ from ..configs.base import ParallelConfig
 from ..core import plan_cache as pc
 from ..core.schedule import Schedule, make_schedule
 from ..masks import MaskSpec, coerce_mask
+from .wire import coerce_wire
 
 # replanned schedules keep the configured coalescing by default — an
 # elastic resize must not silently drop the launch amortization
@@ -36,7 +37,8 @@ _DEFAULT_COALESCE = ParallelConfig().coalesce
 
 def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            *, n_q_heads: int, n_kv_heads: int, head_dim: int,
-           mask=True, coalesce: int = _DEFAULT_COALESCE,
+           mask=True, coalesce: int | None = None,
+           wire=None, in_dtype_bytes: float | None = None,
            speeds: np.ndarray | None = None,
            pcfg: ParallelConfig | None = None,
            cache: pc.PlanCache | None = None) -> Schedule:
@@ -58,10 +60,25 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     re-grown fleet re-hits its pre-shrink plans.  ``mask`` (a
     :class:`~repro.masks.MaskSpec` or legacy causal bool) is part of the
     plan-cache key, so schedules of different mask families never mix.
+    ``wire`` (or ``pcfg.comm_dtype``) is preserved the same way: a
+    resize must not silently fall back to the f32 wire, and plans of
+    different wire formats never share a cache entry.  For both knobs
+    the precedence is uniform: an explicit argument wins, otherwise
+    ``pcfg`` supplies it, otherwise the repo default.
     """
     mask = coerce_mask(mask)
     if pcfg is not None:
-        coalesce = pcfg.coalesce
+        if coalesce is None:
+            coalesce = pcfg.coalesce
+        if wire is None:
+            wire = pcfg.comm_dtype
+        if in_dtype_bytes is None:
+            in_dtype_bytes = pcfg.in_dtype_bytes
+    if coalesce is None:
+        coalesce = _DEFAULT_COALESCE
+    if in_dtype_bytes is None:
+        in_dtype_bytes = ParallelConfig().in_dtype_bytes
+    wire = coerce_wire(wire)
     total = int(sum(seqlens))
     tpw = -(-total // (new_n_workers * block_size)) * block_size
 
@@ -69,19 +86,22 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
         return make_schedule(seqlens, new_n_workers, tpw, block_size,
                              n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
                              head_dim=head_dim, mask=mask,
-                             coalesce=coalesce, speeds=speeds)
+                             coalesce=coalesce, wire=wire,
+                             in_dtype_bytes=in_dtype_bytes, speeds=speeds)
 
     if cache is None:
         return build()
     key = pc.plan_key(seqlens, new_n_workers, tpw, block_size,
-                      mask=mask, coalesce=coalesce, speeds=speeds)
+                      mask=mask, coalesce=coalesce, wire=wire,
+                      in_dtype_bytes=in_dtype_bytes, speeds=speeds)
     return cache.get_or_build(key, build)
 
 
 def replan_groups(seqlens: Sequence[int], new_n_workers: int,
                   block_size: int, masks: Sequence, *, n_q_heads: int,
                   n_kv_heads: int, head_dim: int,
-                  coalesce: int = _DEFAULT_COALESCE,
+                  coalesce: int | None = None,
+                  wire=None, in_dtype_bytes: float | None = None,
                   speeds: np.ndarray | None = None,
                   pcfg: ParallelConfig | None = None,
                   cache: pc.PlanCache | None = None
@@ -102,6 +122,7 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
         out[m] = replan(seqlens, new_n_workers, block_size,
                         n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
                         head_dim=head_dim, mask=m, coalesce=coalesce,
+                        wire=wire, in_dtype_bytes=in_dtype_bytes,
                         speeds=speeds, pcfg=pcfg, cache=cache)
     return out
 

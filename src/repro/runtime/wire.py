@@ -1,0 +1,223 @@
+"""Quantized wire formats for all FCP communication (codec layer).
+
+Every FCP collective — the transparent reshuffle's Q/K/V payloads, the
+coalesced round KV stacks, and the restore of O — is an arbitrary P2P
+``lax.ppermute`` whose bytes are pure overhead: the paper's §5 MFU gains
+hinge on keeping that traffic cheap, and FlashCP/DCP both argue the next
+multiple lives in communication efficiency.  This module is the single
+quantization implementation for the repo:
+
+* :class:`WireFormat` — a frozen, hashable description of what travels
+  on the wire: ``f32`` (passthrough: payloads ship in their compute
+  dtype, bit-exact with the unquantized executor), ``bf16`` (truncate,
+  2x fewer bytes), or ``int8`` with **per-(block, head) float32 scales**
+  (~3.7x fewer bytes including the scale side-band).
+* :func:`encode` / :func:`decode` — the codec.  Scales are computed per
+  *scale group* (one group per (payload row, head) on the executor's
+  ``[rows, heads, block, head_dim]`` payloads; per tensor for gradient
+  leaves), so a single outlier head cannot wash out the whole block's
+  resolution.
+* :func:`ship` — ``encode -> ppermute -> decode`` as ONE differentiable
+  primitive (``jax.custom_vjp``): the backward pass ships the cotangent
+  through the *reversed* permutation under the **same wire format**, so
+  gradients pay the same (bounded) wire error as activations and the
+  ``f32`` format stays bit-identical to JAX's native ppermute transpose.
+* byte accounting (:meth:`WireFormat.group_bytes`,
+  :meth:`WireFormat.comm_scale`) — the cost model prices communication
+  in *wire bytes*, not block counts; the coalescer pad cap, the
+  ``locality="auto"`` decision, and the distributor's locality tolerance
+  all consume these numbers (core/cost_model.py).
+
+Exactness is preserved everywhere except the wire: encode happens right
+before a payload is gathered into a collective, decode on arrival commit
+into the receive buffer's compute dtype, so kernels, merge math, and
+plan tables are untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("f32", "bf16", "int8")
+
+# bytes per payload value on the wire
+_BYTES = {"f32": 4.0, "bf16": 2.0, "int8": 1.0}
+# side-band bytes per scale group (one f32 scale per group)
+_SCALE_BYTES = {"f32": 0.0, "bf16": 0.0, "int8": 4.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """One wire format.  Hashable: rides ``StaticSpec``, plan-cache keys
+    and jit static arguments directly (same contract as ``MaskSpec``)."""
+
+    kind: str = "f32"
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown wire format {self.kind!r} "
+                             f"(expected one of {KINDS})")
+
+    def key(self) -> tuple:
+        """Hashable identity for plan-cache keys / jit signatures."""
+        return (self.kind,)
+
+    # ---- byte accounting ---------------------------------------------------
+    #
+    # All pricing is relative to the bytes the payload would ship
+    # UNENCODED (``in_bytes`` = itemsize of the compute dtype): the
+    # "f32" format is a passthrough — under bf16 compute it ships
+    # 2-byte payloads, and the bf16 wire saves nothing there (it never
+    # upcasts) while int8 still halves the traffic.  Defaults assume
+    # f32 compute (the executor-test and benchmark configuration).
+
+    @property
+    def bytes_per_value(self) -> float:
+        """Wire bytes per value under f32 compute (reference numbers)."""
+        return _BYTES[self.kind]
+
+    @property
+    def scale_bytes(self) -> float:
+        """Side-band bytes per scale group (0 unless quantized with
+        explicit scales)."""
+        return _SCALE_BYTES[self.kind]
+
+    def payload_bytes_per_value(self, in_bytes: float = 4.0) -> float:
+        """Wire bytes per value for payloads of an ``in_bytes``-byte
+        compute dtype (passthrough ships as-is; bf16 never upcasts)."""
+        if self.kind == "f32":
+            return float(in_bytes)
+        if self.kind == "bf16":
+            return min(2.0, float(in_bytes))
+        return 1.0
+
+    def group_bytes(self, values_per_group: int,
+                    in_bytes: float = 4.0) -> float:
+        """Wire bytes of one scale group of ``values_per_group`` payload
+        values (payload + scale side-band)."""
+        return (self.payload_bytes_per_value(in_bytes) * values_per_group
+                + self.scale_bytes)
+
+    def comm_scale(self, values_per_group: int = 4096,
+                   in_bytes: float = 4.0) -> float:
+        """Per-value wire cost relative to the unencoded payload (<= 1).
+        The planner's byte-aware heuristics weigh communication terms by
+        this factor; the default group size is one 4K-token block row's
+        worth of values, where the int8 scale side-band is negligible."""
+        values_per_group = max(1, int(values_per_group))
+        return (self.group_bytes(values_per_group, in_bytes)
+                / (float(in_bytes) * values_per_group))
+
+    def __str__(self) -> str:
+        return self.kind
+
+
+WIRE_F32 = WireFormat("f32")
+WIRE_BF16 = WireFormat("bf16")
+WIRE_INT8 = WireFormat("int8")
+
+
+def parse_wire(s: str) -> WireFormat:
+    """CLI/config syntax: ``f32`` | ``bf16`` | ``int8`` (plus the common
+    dtype aliases)."""
+    s = s.strip().lower()
+    alias = {"": "f32", "f32": "f32", "fp32": "f32", "float32": "f32",
+             "bf16": "bf16", "bfloat16": "bf16", "int8": "int8"}
+    if s not in alias:
+        raise ValueError(f"unknown wire format {s!r} "
+                         f"(expected f32 | bf16 | int8)")
+    return WireFormat(alias[s])
+
+
+def coerce_wire(wire) -> WireFormat:
+    """Normalize ``WireFormat | str | None`` to a ``WireFormat``
+    (``None`` -> the exact f32 passthrough)."""
+    if wire is None:
+        return WIRE_F32
+    if isinstance(wire, WireFormat):
+        return wire
+    if isinstance(wire, str):
+        return parse_wire(wire)
+    raise TypeError(f"cannot interpret {wire!r} as a WireFormat")
+
+
+# --------------------------------------------------------------------------
+# codec
+# --------------------------------------------------------------------------
+
+def encode(x: jax.Array, fmt: WireFormat, scale_axes: tuple | None = None
+           ) -> tuple[jax.Array, jax.Array | None]:
+    """Encode ``x`` for the wire.  Returns ``(payload, scales)`` where
+    ``scales`` is ``None`` for the scale-free formats.
+
+    ``scale_axes`` are the axes reduced per scale group (``None`` = one
+    scale for the whole tensor).  Scales keep ``keepdims`` so decode
+    broadcasts at any rank; an all-zero group (e.g. a trash-padded
+    payload row) encodes to zeros with a zero scale — no NaN/Inf paths.
+    """
+    if fmt.kind == "f32":
+        return x, None                     # passthrough, bit-exact
+    if fmt.kind == "bf16":
+        return x.astype(jnp.bfloat16), None
+    axes = tuple(range(x.ndim)) if scale_axes is None else scale_axes
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=axes, keepdims=True)
+    scales = (amax / 127.0).astype(jnp.float32)
+    # amax == 0 -> every value is 0 -> 0 * (127/eps) == 0: safe
+    q = jnp.round(x32 * (127.0 / jnp.maximum(amax, 1e-30)))
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8), scales
+
+
+def decode(payload: jax.Array, scales: jax.Array | None, fmt: WireFormat,
+           dtype) -> jax.Array:
+    """Decode a wire payload back into the compute ``dtype``."""
+    if fmt.kind == "f32":
+        return payload
+    if fmt.kind == "bf16":
+        return payload.astype(dtype)
+    return (payload.astype(jnp.float32) * scales).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# the shipping primitive: encode -> ppermute -> decode, differentiable
+# --------------------------------------------------------------------------
+
+def _ship(x, perm, axis_name, fmt, scale_axes):
+    payload, scales = encode(x, fmt, scale_axes)
+    payload = jax.lax.ppermute(payload, axis_name, perm)
+    if scales is not None:
+        scales = jax.lax.ppermute(scales, axis_name, perm)
+    return decode(payload, scales, fmt, x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def ship(x: jax.Array, perm: tuple, axis_name: str,
+         fmt: WireFormat = WIRE_F32,
+         scale_axes: tuple | None = None) -> jax.Array:
+    """Move ``x`` along ``perm`` over ``axis_name`` in wire format
+    ``fmt``; returns the received payload decoded to ``x.dtype``.
+
+    The quantized formats are not differentiable elementwise (round /
+    truncate), so the whole hop is one ``custom_vjp``: the backward pass
+    ships the cotangent through the reversed partial permutation under
+    the same wire format — gradients travel the same cheap wire, with
+    the same bounded error, and ``f32`` reproduces JAX's native
+    ppermute transpose bit-for-bit.
+    """
+    return _ship(x, perm, axis_name, fmt, scale_axes)
+
+
+def _ship_fwd(x, perm, axis_name, fmt, scale_axes):
+    return _ship(x, perm, axis_name, fmt, scale_axes), None
+
+
+def _ship_bwd(perm, axis_name, fmt, scale_axes, _res, g):
+    rev = tuple((d, s) for s, d in perm)
+    return (_ship(g, rev, axis_name, fmt, scale_axes),)
+
+
+ship.defvjp(_ship_fwd, _ship_bwd)

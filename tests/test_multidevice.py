@@ -54,6 +54,16 @@ def test_masked_executor_multidevice():
     assert "ALL MASKED EXECUTOR CASES PASSED" in out
 
 
+@pytest.mark.slow
+def test_wire_executor_multidevice():
+    # quantized wire formats: ship(f32) bit-exact with raw ppermute,
+    # bf16/int8 outputs + grads vs the f32 wire within documented
+    # tolerances (causal / swa / mixed layer groups, per-step + fused),
+    # and the attn_out_bf16 restore-cast parity
+    out = _run("run_wire_executor.py", timeout=1800)
+    assert "ALL WIRE EXECUTOR CASES PASSED" in out
+
+
 def test_cp_decode_multidevice():
     out = _run("run_decode.py")
     assert "ALL MULTIDEVICE DECODE CASES PASSED" in out

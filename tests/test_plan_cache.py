@@ -296,3 +296,49 @@ def test_plan_cache_never_shares_entries_across_window_sizes():
     assert sum(map(len, s1.deps)) < sum(map(len, s2.deps))
     # re-probe hits the right entry
     assert cache.get_or_build(k1, lambda: build(1024)) is s1
+
+
+# --------------------------------------------------------------------------
+# WireFormat in the plan key (tentpole regression: cached plans must
+# never cross wire formats — the executor graph and the planner's
+# byte-aware decisions both differ per format)
+# --------------------------------------------------------------------------
+
+def test_plan_key_distinguishes_wire_formats():
+    lens = [2048, 2048]
+    keys = [pc.plan_key(lens, 2, 2048, 1024, wire=w)
+            for w in ("f32", "bf16", "int8")]
+    assert len(set(keys)) == len(keys)
+    # the default key is the f32 wire (legacy call sites unchanged)
+    assert pc.plan_key(lens, 2, 2048, 1024) == \
+        pc.plan_key(lens, 2, 2048, 1024, wire="f32")
+    # wire composes with (does not mask) the other knobs
+    assert pc.plan_key(lens, 2, 2048, 1024, wire="bf16", coalesce=2) != \
+        pc.plan_key(lens, 2, 2048, 1024, wire="bf16", coalesce=4)
+
+
+def test_plan_cache_never_shares_entries_across_wire_formats():
+    """Two wire formats on the same batch must build two schedules (a
+    shared entry would run bf16's encode/decode graph for the int8
+    config, or skip quantization entirely)."""
+    lens = [4096]
+
+    def build(w):
+        return make_schedule(lens, 2, 2048, 1024, n_q_heads=2,
+                             n_kv_heads=2, head_dim=32, wire=w)
+
+    cache = pc.PlanCache(max_size=8)
+    entries = {}
+    for w in ("f32", "bf16", "int8"):
+        k = pc.plan_key(lens, 2, 2048, 1024, wire=w)
+        entries[w] = cache.get_or_build(k, lambda w=w: build(w))
+    assert cache.stats.misses == 3 and cache.stats.hits == 0
+    specs = {s.spec for s in entries.values()}
+    assert len(specs) == 3                  # specs never cross formats
+    for w, s in entries.items():
+        assert str(s.spec.wire) == w
+    # re-probe hits the right entry per format
+    for w in ("f32", "bf16", "int8"):
+        k = pc.plan_key(lens, 2, 2048, 1024, wire=w)
+        assert cache.get_or_build(k, lambda: build("f32")) is entries[w]
+    assert cache.stats.hits == 3

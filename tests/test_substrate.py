@@ -218,6 +218,55 @@ def test_elastic_replan_preserves_plan_knobs_and_reuses_cache():
     assert cache.stats.hits == 1
 
 
+def test_elastic_replan_preserves_wire_format():
+    """A resize must keep ``--comm-dtype``: the replanned schedule ships
+    the same wire format, and plans of different formats never collide
+    in a shared cache."""
+    from repro.configs.base import ParallelConfig
+    from repro.core import plan_cache as pc
+    from repro.runtime import wire
+
+    pcfg = ParallelConfig(coalesce=2, comm_dtype="int8")
+    cache = pc.PlanCache(max_size=8)
+    seqlens = [6000, 1500, 700]
+    s4 = elastic.replan(seqlens, 4, 1024, n_q_heads=4, n_kv_heads=2,
+                        head_dim=64, pcfg=pcfg, cache=cache)
+    assert s4.spec.wire == wire.WIRE_INT8   # knob survived the resize
+    s2 = elastic.replan(seqlens, 2, 1024, n_q_heads=4, n_kv_heads=2,
+                        head_dim=64, pcfg=pcfg, cache=cache)
+    assert s2.spec.wire == wire.WIRE_INT8
+    # growing back re-hits the pre-shrink int8 plan …
+    again = elastic.replan(seqlens, 4, 1024, n_q_heads=4, n_kv_heads=2,
+                           head_dim=64, pcfg=pcfg, cache=cache)
+    assert again is s4 and cache.stats.hits == 1
+    # … while an explicit different wire misses (no cross-format entry)
+    sbf = elastic.replan(seqlens, 4, 1024, n_q_heads=4, n_kv_heads=2,
+                         head_dim=64, wire="bf16", cache=cache)
+    assert sbf is not s4 and sbf.spec.wire == wire.WIRE_BF16
+    # uniform precedence: an explicit argument wins over pcfg for BOTH
+    # knobs (otherwise pcfg supplies it, otherwise the repo default)
+    sx = elastic.replan(seqlens, 2, 1024, n_q_heads=4, n_kv_heads=2,
+                        head_dim=64, wire="f32", coalesce=1,
+                        pcfg=pcfg, cache=cache)
+    assert sx.spec.wire == wire.WIRE_F32
+    assert sx.spec.coalesce == 1            # not pcfg's 2
+    s_def = elastic.replan(seqlens, 2, 1024, n_q_heads=4, n_kv_heads=2,
+                           head_dim=64)
+    assert s_def.spec.coalesce == 16 and str(s_def.spec.wire) == "f32"
+    # in_dtype_bytes rides pcfg too: a bf16-compute model's resize must
+    # land on the same plan-cache key the train pipeline would build
+    # (and reprice the wire for bf16 payloads, not assume f32 compute)
+    pcfg2 = ParallelConfig(coalesce=2, comm_dtype="bf16",
+                           in_dtype_bytes=2.0)
+    cache2 = pc.PlanCache(max_size=4)
+    s_bf = elastic.replan(seqlens, 2, 1024, n_q_heads=4, n_kv_heads=2,
+                          head_dim=64, pcfg=pcfg2, cache=cache2)
+    tpw = -(-sum(seqlens) // (2 * 1024)) * 1024
+    train_key = pc.plan_key(seqlens, 2, tpw, 1024, coalesce=2,
+                            wire="bf16", in_dtype_bytes=2.0)
+    assert cache2.lookup(train_key) is s_bf
+
+
 # --------------------------------------------------------------------------
 # gradient compression
 # --------------------------------------------------------------------------

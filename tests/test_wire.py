@@ -1,0 +1,268 @@
+"""Wire-format codec + bytes-aware planning tests (runtime/wire.py).
+
+Covers the codec invariants the executor relies on (f32 passthrough is
+the identity, bf16/int8 round-trip error bounds, trash-row zero safety,
+per-group scale shapes), the byte-accounting helpers that price the
+planner's comm terms, the wire-aware schedule knobs, and the shared
+EF-DCN compression path.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import make_schedule
+from repro.core.planner import COALESCE_PAD_CAP
+from repro.runtime import compression, wire
+
+
+# --------------------------------------------------------------------------
+# WireFormat basics
+# --------------------------------------------------------------------------
+
+def test_parse_and_coerce():
+    assert wire.parse_wire("f32") == wire.WIRE_F32
+    assert wire.parse_wire("bfloat16") == wire.WIRE_BF16
+    assert wire.parse_wire("INT8") == wire.WIRE_INT8
+    assert wire.coerce_wire(None) == wire.WIRE_F32
+    assert wire.coerce_wire("bf16") == wire.WIRE_BF16
+    assert wire.coerce_wire(wire.WIRE_INT8) is wire.WIRE_INT8
+    with pytest.raises(ValueError):
+        wire.parse_wire("fp8")
+    with pytest.raises(ValueError):
+        wire.WireFormat("int4")
+    with pytest.raises(TypeError):
+        wire.coerce_wire(16)
+
+
+def test_wire_formats_are_hashable_and_distinct():
+    fmts = {wire.WIRE_F32, wire.WIRE_BF16, wire.WIRE_INT8}
+    assert len(fmts) == 3
+    assert len({f.key() for f in fmts}) == 3
+
+
+# --------------------------------------------------------------------------
+# codec round-trip invariants
+# --------------------------------------------------------------------------
+
+def test_f32_passthrough_is_identity():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 2, 4, 8)),
+                    jnp.float32)
+    payload, scales = wire.encode(x, wire.WIRE_F32)
+    assert payload is x and scales is None
+    assert wire.decode(payload, scales, wire.WIRE_F32, x.dtype) is x
+
+
+def test_bf16_roundtrip_error_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 3, 16, 8)) * 10, jnp.float32)
+    payload, scales = wire.encode(x, wire.WIRE_BF16)
+    assert payload.dtype == jnp.bfloat16 and scales is None
+    y = wire.decode(payload, scales, wire.WIRE_BF16, jnp.float32)
+    # bf16 has an 8-bit mantissa: relative error <= 2^-8 per value
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert (err <= np.abs(np.asarray(x)) * 2.0 ** -8 + 1e-30).all()
+
+
+def test_int8_roundtrip_error_bound_per_group():
+    rng = np.random.default_rng(2)
+    x = np.asarray(rng.normal(size=(5, 3, 8, 4)), np.float32)
+    # wildly different group magnitudes: per-(row, head) scales must
+    # keep each group's error proportional to ITS amax, not the max
+    x *= (10.0 ** rng.integers(-3, 4, size=(5, 3, 1, 1)))
+    payload, scales = wire.encode(jnp.asarray(x), wire.WIRE_INT8,
+                                  scale_axes=(-2, -1))
+    assert payload.dtype == jnp.int8
+    assert scales.shape == (5, 3, 1, 1) and scales.dtype == jnp.float32
+    y = np.asarray(wire.decode(payload, scales, wire.WIRE_INT8,
+                               jnp.float32))
+    amax = np.abs(x).max(axis=(-2, -1), keepdims=True)
+    assert (np.abs(y - x) <= amax / 127.0 * 0.5 + 1e-30).all()
+
+
+def test_int8_zero_group_is_safe():
+    """Trash-padded payload rows are all-zero: they must encode to
+    zeros with a zero scale, no NaN/Inf anywhere."""
+    x = jnp.zeros((2, 3, 4, 4), jnp.float32)
+    payload, scales = wire.encode(x, wire.WIRE_INT8, scale_axes=(-2, -1))
+    assert not np.asarray(payload).any()
+    assert not np.asarray(scales).any()
+    y = np.asarray(wire.decode(payload, scales, wire.WIRE_INT8,
+                               jnp.float32))
+    assert np.isfinite(y).all() and not y.any()
+
+
+def test_int8_per_tensor_scale_default():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(7,)) * 3,
+                    jnp.float32)
+    payload, scales = wire.encode(x, wire.WIRE_INT8)
+    assert scales.shape == (1,)
+    y = np.asarray(wire.decode(payload, scales, wire.WIRE_INT8,
+                               jnp.float32))
+    assert np.abs(y - np.asarray(x)).max() <= float(
+        np.abs(np.asarray(x)).max()) / 127.0
+
+
+# --------------------------------------------------------------------------
+# byte accounting
+# --------------------------------------------------------------------------
+
+def test_group_bytes_and_comm_scale():
+    n = 4096
+    assert wire.WIRE_F32.group_bytes(n) == 4 * n
+    assert wire.WIRE_BF16.group_bytes(n) == 2 * n
+    assert wire.WIRE_INT8.group_bytes(n) == n + 4     # + f32 scale
+    assert wire.WIRE_F32.comm_scale(n) == 1.0
+    assert wire.WIRE_BF16.comm_scale(n) == 0.5
+    assert 0.25 < wire.WIRE_INT8.comm_scale(n) < 0.26
+
+
+def test_byte_accounting_follows_compute_dtype():
+    """Pricing is relative to the UNENCODED payload: under bf16 compute
+    (in_bytes=2) the passthrough ships bf16, the bf16 wire saves
+    nothing, and int8 still roughly halves the traffic — the planner
+    must not degrade schedules for savings that don't exist."""
+    n = 4096
+    assert wire.WIRE_F32.payload_bytes_per_value(2) == 2.0
+    assert wire.WIRE_BF16.payload_bytes_per_value(2) == 2.0   # no upcast
+    assert wire.WIRE_INT8.payload_bytes_per_value(2) == 1.0
+    assert wire.WIRE_F32.comm_scale(n, in_bytes=2) == 1.0
+    assert wire.WIRE_BF16.comm_scale(n, in_bytes=2) == 1.0
+    assert 0.5 < wire.WIRE_INT8.comm_scale(n, in_bytes=2) < 0.51
+    # pad cap / comm-scale heuristics collapse to neutral for a no-op
+    # wire under bf16 compute
+    base = COALESCE_PAD_CAP
+    assert cm.wire_pad_cap(wire.WIRE_BF16, base, in_bytes=2) == \
+        pytest.approx(base)
+    assert cm.kv_wire_block_bytes(wire.WIRE_BF16, 1024, 8, 64,
+                                  in_bytes=2) == \
+        cm.kv_wire_block_bytes(wire.WIRE_F32, 1024, 8, 64, in_bytes=2)
+    # and the plan key separates the repricing
+    from repro.core import plan_cache as pc
+    assert pc.plan_key([2048], 2, 2048, 1024, wire="bf16") != \
+        pc.plan_key([2048], 2, 2048, 1024, wire="bf16", in_dtype_bytes=2)
+
+
+def test_block_bytes_helpers_ratios():
+    args = (1024, 8, 64)     # block_size, kv_heads, head_dim
+    f32 = cm.kv_wire_block_bytes(wire.WIRE_F32, *args)
+    assert f32 == 2 * 8 * 1024 * 64 * 4
+    assert cm.kv_wire_block_bytes(wire.WIRE_BF16, *args) == f32 / 2
+    assert cm.kv_wire_block_bytes(wire.WIRE_INT8, *args) < f32 * 0.26
+    qkv = cm.qkv_wire_block_bytes(wire.WIRE_BF16, 1024, 8, 2, 64)
+    assert qkv == (8 + 4) * 1024 * 64 * 2
+    assert cm.o_wire_block_bytes(wire.WIRE_F32, 1024, 8, 64) == \
+        8 * 1024 * 64 * 4
+
+
+def test_wire_pad_cap_scaling():
+    base = COALESCE_PAD_CAP
+    assert cm.wire_pad_cap(wire.WIRE_F32, base) == pytest.approx(base)
+    assert cm.wire_pad_cap(wire.WIRE_BF16, base) == pytest.approx(
+        1 + (base - 1) * 2)
+    # clamped: int8 cannot justify unbounded trash rows
+    assert cm.wire_pad_cap(wire.WIRE_INT8, base) <= 3.0
+    assert cm.wire_pad_cap(wire.WIRE_BF16, base) > base
+
+
+# --------------------------------------------------------------------------
+# wire-aware scheduling
+# --------------------------------------------------------------------------
+
+def test_make_schedule_carries_wire_and_defaults_to_f32():
+    lens = [3000, 600, 300, 196]
+    s = make_schedule(lens, 2, 2048, 512, n_q_heads=2, n_kv_heads=2,
+                      head_dim=16)
+    assert s.spec.wire == wire.WIRE_F32
+    s8 = make_schedule(lens, 2, 2048, 512, n_q_heads=2, n_kv_heads=2,
+                       head_dim=16, wire="int8")
+    assert s8.spec.wire == wire.WIRE_INT8
+    assert s.spec != s8.spec        # specs never cross formats
+
+
+def test_spec_wire_bytes_breakdown_and_ratios():
+    lens = [4000, 2000, 1000, 1192]
+    s = make_schedule(lens, 4, 2048, 512, n_q_heads=4, n_kv_heads=2,
+                      head_dim=16, coalesce=4)
+    f32 = cm.spec_wire_bytes(s.spec, 4, 2, 16)          # spec.wire = f32
+    assert set(f32) == {"reshuffle", "rounds", "restore", "total"}
+    assert f32["rounds"] > 0 and f32["total"] == pytest.approx(
+        f32["reshuffle"] + f32["rounds"] + f32["restore"])
+    bf = cm.spec_wire_bytes(s.spec, 4, 2, 16, wire="bf16")
+    assert bf["total"] == pytest.approx(f32["total"] / 2)
+    i8 = cm.spec_wire_bytes(s.spec, 4, 2, 16, wire="int8")
+    assert i8["total"] < f32["total"] * 0.26
+
+
+def test_locality_auto_is_bytes_aware():
+    """A cheaper wire shrinks locality's upside: a horizon that just
+    fits a worker keeps stream placement on the f32 wire but flips to
+    balance-first on int8 (same batch, same geometry)."""
+    lens = [2048] * 4                       # horizon == tokens_per_worker
+    s32 = make_schedule(lens, 4, 2048, 512, n_q_heads=2, n_kv_heads=2,
+                        head_dim=16, locality="auto", wire="f32")
+    s8 = make_schedule(lens, 4, 2048, 512, n_q_heads=2, n_kv_heads=2,
+                       head_dim=16, locality="auto", wire="int8")
+    # f32: horizon <= tpw -> locality refinement prunes comm traffic;
+    # int8: comm is ~4x cheaper, balance wins -> the distributor is
+    # free to move blocks (the schedules stay numerically equivalent
+    # either way; only the traffic/balance tradeoff shifts)
+    assert s8.spec.wire == wire.WIRE_INT8
+    assert len(s32.resh_edges) < len(s8.resh_edges)
+    assert len(s32.comm_edges) < len(s8.comm_edges)
+
+
+# --------------------------------------------------------------------------
+# shared EF-DCN compression path
+# --------------------------------------------------------------------------
+
+def test_compress_grads_uses_wire_codec_and_transposes():
+    rng = np.random.default_rng(4)
+    g = {"a": jnp.asarray(rng.normal(size=(8, 3)), jnp.float32),
+         "b": {"c": jnp.asarray(rng.normal(size=(5,)), jnp.float32)}}
+    res = compression.init_residuals(g)
+    comp, new_res = compression.compress_grads(g, res)
+    # tree structure preserved on both outputs
+    assert set(comp) == {"a", "b"} and set(new_res) == {"a", "b"}
+    assert comp["a"].dtype == jnp.bfloat16
+    assert new_res["a"].dtype == jnp.float32
+    # EF identity: dequantized + residual reconstructs g exactly
+    for path in (("a",), ("b", "c")):
+        gv = g[path[0]] if len(path) == 1 else g[path[0]][path[1]]
+        cv = comp[path[0]] if len(path) == 1 else comp[path[0]][path[1]]
+        rv = (new_res[path[0]] if len(path) == 1
+              else new_res[path[0]][path[1]])
+        np.testing.assert_array_equal(
+            np.asarray(cv.astype(jnp.float32) + rv), np.asarray(gv))
+
+
+def test_compress_grads_rejects_scaled_formats():
+    g = {"a": jnp.ones(4)}
+    with pytest.raises(ValueError):
+        compression.compress_grads(g, compression.init_residuals(g),
+                                   fmt=wire.WIRE_INT8)
+
+
+def test_compress_grads_f32_is_lossless():
+    g = {"a": jnp.asarray([1.0, 2.5, -3.25])}
+    comp, res = compression.compress_grads(
+        g, compression.init_residuals(g), fmt=wire.WIRE_F32)
+    np.testing.assert_array_equal(np.asarray(comp["a"]),
+                                  np.asarray(g["a"]))
+    assert not np.asarray(res["a"]).any()
+
+
+# --------------------------------------------------------------------------
+# StaticSpec.wire rides jit-static plumbing
+# --------------------------------------------------------------------------
+
+def test_spec_replace_wire_changes_identity_only():
+    lens = [2000, 1000, 1096]
+    s = make_schedule(lens, 2, 2048, 512, n_q_heads=2, n_kv_heads=2,
+                      head_dim=16)
+    spec8 = dataclasses.replace(s.spec, wire=wire.WIRE_INT8)
+    assert spec8 != s.spec and hash(spec8) != hash(s.spec)
+    assert spec8.table_dims == s.spec.table_dims    # same table shapes
