@@ -76,7 +76,9 @@ def steady_state(args) -> dict:
                              n_buckets=args.n_buckets, seed=12,
                              plan_buckets=args.plan_buckets,
                              bucket_min_len=bs)
-    cache = pc.PlanCache(max_size=args.plan_cache_size)
+    # verify=True: every cold plan passes the static verifier at insert
+    # (miss path); the hit path is untouched, which the stats prove below
+    cache = pc.PlanCache(max_size=args.plan_cache_size, verify=True)
     planner = pc.PlanAheadPlanner(cache, enabled=True)
 
     def build(lens):
@@ -171,6 +173,7 @@ def steady_state(args) -> dict:
                                      / max(np.median(cached_us), 1e-9)),
         "exec_ms_median": float(np.median(exec_ms)),
         "plan_ahead_builds_consumed": planner.prefetched_hits,
+        "plans_verified": s.verified,
         "equivalence": equivalence,
     }
     # acceptance criteria (hard gates — CI fails through this benchmark)
@@ -178,6 +181,11 @@ def steady_state(args) -> dict:
         f"steady-state hit rate {result['hit_rate']:.2f} < 0.9"
     assert recompiles_after_warmup == 0
     assert equivalence is not None
+    # verification is insert-time only: every cold plan verified, and
+    # zero verifications attributable to the cache's hits
+    assert s.verified > 0, "verify=True cache never verified a plan"
+    assert s.verified <= s.misses, \
+        f"cache hits paid verification: {s.verified} > {s.misses} misses"
     return result
 
 

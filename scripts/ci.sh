@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Local mirror of .github/workflows/ci.yml.
 #
-#   scripts/ci.sh lint         # ruff over the whole repo
+#   scripts/ci.sh lint         # ruff + mypy (mypy soft-skips if absent)
+#   scripts/ci.sh verify       # repo lints + plan-fuzzing harness
 #   scripts/ci.sh test         # fast tier-1 suite + benches + regression gate
 #   scripts/ci.sh multidevice  # slow 8-host-device subprocess suites
 #   scripts/ci.sh all          # everything, in CI job order
@@ -25,6 +26,21 @@ run_lint() {
         exit 1
     fi
     python -m ruff check .
+    if python -m mypy --version >/dev/null 2>&1; then
+        python -m mypy
+    else
+        echo "mypy not installed; skipping type check" \
+             "(CI runs it: python -m pip install mypy)" >&2
+    fi
+}
+
+run_verify() {
+    # pure host-side (numpy only): repo-specific lints, then the
+    # randomized plan-fuzzing harness over the static verifier
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.analysis.lints
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.verify --fuzz --plans 200 --seed 0
 }
 
 run_test() {
@@ -51,10 +67,11 @@ run_multidevice() {
 
 case "$job" in
     lint)         run_lint ;;
+    verify)       run_verify ;;
     test)         run_test ;;
     multidevice)  run_multidevice ;;
-    all)          run_lint; run_test; run_multidevice ;;
+    all)          run_lint; run_verify; run_test; run_multidevice ;;
     *)
-        echo "usage: scripts/ci.sh [lint|test|multidevice|all]" >&2
+        echo "usage: scripts/ci.sh [lint|verify|test|multidevice|all]" >&2
         exit 2 ;;
 esac

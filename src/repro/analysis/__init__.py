@@ -1,0 +1,7 @@
+"""Host-side analysis: plan verification (``verifier``), repo-specific
+lints (``lints``), roofline estimates and HLO comm accounting.
+
+Submodules are imported explicitly (``from repro.analysis import
+verifier``) — some pull in jax, and the verifier must stay importable
+from hot paths without side effects.
+"""

@@ -1,0 +1,236 @@
+"""Repo-specific static lints (run from ``scripts/ci.sh`` and the CI
+``verify`` job; standalone via ``python -m repro.analysis.lints``).
+
+Generic linters cannot see this repo's invariants, so each lint here
+encodes a bug class we have already shipped or explicitly designed
+against:
+
+* **spec/key reflection lint** — every field of ``StaticSpec`` must be
+  accounted for in :func:`repro.core.plan_cache.plan_key`: either a
+  direct key input, derived deterministically from the key inputs, or a
+  planner knob with a registered probe proving two values of the knob
+  produce different keys.  PR 4 shipped (and fixed) a cache collision
+  where mask *family* was keyed but the full ``MaskSpec`` identity was
+  not; this lint makes that class structurally impossible — adding a
+  ``StaticSpec`` field without touching the key registry fails CI.
+* **jit-static-arg lint** — every type used as a jit-static argument
+  (``StaticSpec`` and its members, ``MaskSpec``, ``WireFormat``,
+  ``ExecConfig``) must be a frozen dataclass and actually hashable,
+  or jit tracing dies at call time in whatever code path first passes
+  it.
+* **ppermute-bypass lint** — ``jax.lax.ppermute`` may be *called* only
+  inside ``runtime/wire.py`` (the ``wire.ship`` codec primitive).  A
+  bare ppermute elsewhere ships unencoded payloads, silently bypassing
+  wire formats, byte accounting, and the quantization-aware backward
+  pass.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import sys
+from typing import Callable, Iterable
+
+_SRC = pathlib.Path(__file__).resolve().parents[2]
+_REPRO = _SRC / "repro"
+
+# the one module allowed to execute ppermute (relative to src/)
+_PPERMUTE_HOME = pathlib.Path("repro/runtime/wire.py")
+
+
+# --------------------------------------------------------------------------
+# spec/key reflection lint
+# --------------------------------------------------------------------------
+
+# StaticSpec fields that ARE plan_key inputs directly (or trivially
+# recoded: slots == tokens_per_worker / block_size)
+DIRECT_FIELDS = frozenset({"n_workers", "block_size", "slots"})
+
+# fields the planner derives deterministically from the key inputs —
+# two builds under equal keys produce equal values, so they need no key
+# entry of their own
+DERIVED_FIELDS = frozenset({
+    "ext_slots", "n_matchings", "n_rounds", "n_steps", "n_resh_rounds",
+    "comm_rounds", "resh_rounds", "run_starts",
+})
+
+# planner knobs: StaticSpec fields (and key-only knobs) that must each
+# provably change plan_key.  Each probe is (label, kwargs_a, kwargs_b);
+# the lint asserts plan_key(**a) != plan_key(**b).
+KNOB_PROBES: dict[str, list[tuple[str, dict, dict]]] = {
+    "mask": [
+        ("mask family", {"mask": "causal"}, {"mask": "full"}),
+        ("mask window identity (PR 4 bug class)",
+         {"mask": "swa:16"}, {"mask": "swa:32"}),
+        ("mask chunk identity",
+         {"mask": "chunked:16"}, {"mask": "chunked:32"}),
+    ],
+    "wire": [
+        ("wire format", {"wire": "f32"}, {"wire": "int8"}),
+        ("compute itemsize repricing",
+         {"in_dtype_bytes": 4.0}, {"in_dtype_bytes": 2.0}),
+    ],
+    "coalesce": [
+        ("coalescer degree", {"coalesce": 1}, {"coalesce": 2}),
+    ],
+}
+
+# key-only knobs (not StaticSpec fields) that still must differ-key —
+# they steer the distributor, so equal keys must mean equal plans
+EXTRA_PROBES: list[tuple[str, dict, dict]] = [
+    ("locality", {"locality": "auto"}, {"locality": False}),
+    ("alpha", {"alpha": 1.0}, {"alpha": 2.0}),
+    ("beta", {"beta": 1.0}, {"beta": 2.0}),
+    ("speeds", {"speeds": None}, {"speeds": (1.0, 0.5)}),
+    ("extra (caller context)", {"extra": ()}, {"extra": (8,)}),
+]
+
+
+def check_spec_key_coverage(
+        extra_fields: Iterable[str] = ()) -> list[str]:
+    """Reflect over ``StaticSpec`` and prove every field is folded into
+    ``plan_key``.  ``extra_fields`` lets the lint's own tests inject a
+    hypothetical new field and watch the lint fail."""
+    from ..core import plan_cache as pc
+    from ..core.schedule import StaticSpec
+
+    errors: list[str] = []
+    names = [f.name for f in dataclasses.fields(StaticSpec)]
+    names += list(extra_fields)
+    for name in names:
+        if name in DIRECT_FIELDS or name in DERIVED_FIELDS:
+            continue
+        if name not in KNOB_PROBES:
+            errors.append(
+                f"StaticSpec.{name} has no plan_key accounting: fold it "
+                f"into core/plan_cache.plan_key and register it in "
+                f"analysis/lints.py (KNOB_PROBES with a differing-key "
+                f"probe, or DERIVED_FIELDS if the key inputs determine "
+                f"it)")
+
+    def key(**kw) -> tuple:
+        base = dict(mask=True, coalesce=1, locality="auto", alpha=1.0,
+                    beta=1.0, speeds=None, wire="f32",
+                    in_dtype_bytes=4.0, extra=())
+        base.update(kw)
+        return pc.plan_key([64, 32], 2, 64, 32, **base)
+
+    probes = [p for plist in KNOB_PROBES.values() for p in plist]
+    for label, kw_a, kw_b in probes + EXTRA_PROBES:
+        if key(**kw_a) == key(**kw_b):
+            errors.append(
+                f"plan_key does not distinguish {label}: {kw_a} and "
+                f"{kw_b} collide — cached plans would cross knobs")
+    return errors
+
+
+# --------------------------------------------------------------------------
+# jit-static-arg lint
+# --------------------------------------------------------------------------
+
+def check_jit_static_args() -> list[str]:
+    """Types that ride jit signatures / plan-cache keys must be frozen
+    dataclasses and hashable in practice."""
+    from ..core.executor import ExecConfig
+    from ..core.schedule import CommGroup, CommRound, StaticSpec
+    from ..masks import MaskSpec
+    from ..runtime.wire import WireFormat
+
+    group = CommGroup(perm=((0, 1),), rows=1)
+    samples: list[tuple[type, Callable[[], object]]] = [
+        (MaskSpec, MaskSpec),
+        (WireFormat, WireFormat),
+        (ExecConfig, ExecConfig),
+        (CommGroup, lambda: group),
+        (CommRound, lambda: CommRound(groups=(group,))),
+        (StaticSpec, lambda: StaticSpec(
+            n_workers=2, block_size=32, slots=1, ext_slots=0, coalesce=1,
+            n_matchings=0, n_rounds=0, n_steps=0, n_resh_rounds=0,
+            comm_rounds=(), resh_rounds=(), mask=MaskSpec())),
+    ]
+    errors: list[str] = []
+    for cls, make in samples:
+        if not dataclasses.is_dataclass(cls):
+            errors.append(f"{cls.__name__} is not a dataclass")
+            continue
+        if not cls.__dataclass_params__.frozen:  # type: ignore[attr-defined]
+            errors.append(
+                f"{cls.__name__} must be frozen=True: it is used as a "
+                f"jit-static argument / cache key")
+        try:
+            hash(make())
+        except TypeError as e:
+            errors.append(f"{cls.__name__} is not hashable: {e}")
+    return errors
+
+
+# --------------------------------------------------------------------------
+# ppermute-bypass lint
+# --------------------------------------------------------------------------
+
+def _ppermute_calls(tree: ast.AST) -> list[int]:
+    lines = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = None
+        if isinstance(fn, ast.Attribute):
+            name = fn.attr
+        elif isinstance(fn, ast.Name):
+            name = fn.id
+        if name == "ppermute":
+            lines.append(node.lineno)
+    return lines
+
+
+def check_ppermute_sites(root: pathlib.Path = _SRC) -> list[str]:
+    """Every ``ppermute(...)`` call site outside ``runtime/wire.py`` is
+    an error: all shipping must go through ``wire.ship``."""
+    errors: list[str] = []
+    for path in sorted((root / "repro").rglob("*.py")):
+        rel = path.relative_to(root)
+        if rel == _PPERMUTE_HOME:
+            continue
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError as e:
+            errors.append(f"{rel}: unparseable ({e})")
+            continue
+        for line in _ppermute_calls(tree):
+            errors.append(
+                f"{rel}:{line}: direct ppermute call bypasses "
+                f"wire.ship (wire formats, byte accounting and the "
+                f"quantized backward pass)")
+    return errors
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+def run_all(extra_spec_fields: Iterable[str] = ()) -> list[str]:
+    errors = []
+    errors += check_spec_key_coverage(extra_spec_fields)
+    errors += check_jit_static_args()
+    errors += check_ppermute_sites()
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    del argv
+    errors = run_all()
+    if errors:
+        print(f"{len(errors)} lint error(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("repro lints: OK (spec/key coverage, jit-static args, "
+          "ppermute sites)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,8 +10,8 @@ Layout of one checkpoint:
         COMMIT                     (marker written last: crash-safe)
 
 Restore only trusts directories with a COMMIT marker, so a preemption
-mid-write can never corrupt resume (``runtime/fault_tolerance.py`` tests
-this by killing a run mid-save).
+mid-write can never corrupt resume (``runtime/elastic.resumable_train``
+tests this by killing a run mid-save).
 """
 
 from __future__ import annotations

@@ -138,6 +138,8 @@ class PlanCacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    verified: int = 0       # insert-time static verifications (miss path
+    #                         only — a hit never re-verifies)
 
     @property
     def hit_rate(self) -> float:
@@ -146,7 +148,8 @@ class PlanCacheStats:
 
     def to_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "hit_rate": self.hit_rate}
+                "evictions": self.evictions, "hit_rate": self.hit_rate,
+                "verified": self.verified}
 
 
 class PlanCache:
@@ -158,10 +161,15 @@ class PlanCache:
     hit as well and the executor never recompiles for a repeat.
     """
 
-    def __init__(self, max_size: int = 64):
+    def __init__(self, max_size: int = 64, verify: bool | None = None):
         if max_size < 1:
             raise ValueError("max_size must be >= 1")
         self.max_size = int(max_size)
+        # insert-time static verification (analysis/verifier).  None
+        # follows the process default (on under tests), True/False pin
+        # it.  Only the *miss* path verifies: a hit returns the cached
+        # schedule untouched, so verification adds zero hit overhead.
+        self.verify = verify
         self._entries: OrderedDict[tuple, Schedule] = OrderedDict()
         self._specs: dict[StaticSpec, StaticSpec] = {}
         self._lock = threading.Lock()
@@ -193,7 +201,15 @@ class PlanCache:
         """Insert a built schedule (interning its spec), evicting LRU
         entries beyond ``max_size``.  Returns the cached schedule (an
         earlier insert under the same key wins, keeping identities
-        stable for downstream jit caches)."""
+        stable for downstream jit caches).
+
+        With verification enabled, the schedule is statically verified
+        here — once, before it can ever be served — including the
+        spec/plan-key consistency check when ``key`` has the
+        :func:`plan_key` layout.  Schedules ``make_schedule`` already
+        verified (same invariants, exact head geometry) only re-run the
+        key check."""
+        self._verify_insert(key, sched)
         with self._lock:
             cur = self._entries.get(key)
             if cur is not None:
@@ -211,6 +227,28 @@ class PlanCache:
                 live = {s.spec: s.spec for s in self._entries.values()}
                 self._specs = live
             return sched
+
+    def _verify_insert(self, key: tuple, sched: Schedule) -> None:
+        from ..analysis import verifier
+        if not verifier.should_verify(self.verify) or key in self:
+            return
+        pk = key if verifier.plan_key_shaped(key) else None
+        if sched._verified:
+            # full invariants already checked at build time with the
+            # exact head geometry; only the key consistency is new here
+            if pk is not None:
+                violations = verifier.verify_plan_key(pk, sched)
+                if violations:
+                    raise verifier.PlanVerificationError(violations)
+        else:
+            # the wire key carries the compute itemsize; head geometry
+            # is not part of the key, so the byte checks run with the
+            # verifier's reference heads (self-consistent either way)
+            idb = float(pk[5][-1]) if pk is not None else 4.0
+            verifier.check_schedule(sched, in_dtype_bytes=idb, key=pk)
+            sched._verified = True
+        with self._lock:
+            self.stats.verified += 1
 
     def get_or_build(self, key: tuple,
                      builder: Callable[[], Schedule]) -> Schedule:

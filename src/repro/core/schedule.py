@@ -192,6 +192,14 @@ class Schedule:
     stream_owner: np.ndarray
     slot_of_block: np.ndarray               # [n_blocks] schedule slot
     pairs_per_worker: np.ndarray
+    # bookkeeping, not part of the plan: device-table memo
+    # (core/executor.schedule_tables) and whether this schedule already
+    # passed static verification (analysis/verifier; lets PlanCache
+    # insert-time verification skip straight to the key check)
+    _device_tables: dict | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _verified: bool = dataclasses.field(
+        default=False, repr=False, compare=False)
 
     def signature(self) -> tuple:
         """Bucketing key: plans with equal signatures share a compilation."""
@@ -240,6 +248,7 @@ def make_schedule(
         beta: float = 1.0,
         wire: WireFormat | str = WIRE_F32,      # ppermute wire format
         in_dtype_bytes: float = 4.0,            # compute-dtype itemsize
+        verify: bool | None = None,             # static plan verification
 ) -> Schedule:
     mask = coerce_mask(mask)
     wire = coerce_wire(wire)
@@ -400,13 +409,24 @@ def make_schedule(
     arrays = _build_arrays(batch, spec, assignment, stream_owner, slot_of,
                            comm_groupings, resh_groupings, run_sched,
                            alloc)
-    return Schedule(batch=batch, assignment=assignment, deps=deps, spec=spec,
-                    arrays=arrays, comm_edges=comm_edges,
-                    resh_edges=resh_edges, comm_matchings=matchings,
-                    comm_windows=windows, comm_groupings=comm_groupings,
-                    resh_groupings=resh_groupings,
-                    stream_owner=stream_owner, slot_of_block=slot_of,
-                    pairs_per_worker=pairs_per_worker)
+    sched = Schedule(batch=batch, assignment=assignment, deps=deps,
+                     spec=spec, arrays=arrays, comm_edges=comm_edges,
+                     resh_edges=resh_edges, comm_matchings=matchings,
+                     comm_windows=windows, comm_groupings=comm_groupings,
+                     resh_groupings=resh_groupings,
+                     stream_owner=stream_owner, slot_of_block=slot_of,
+                     pairs_per_worker=pairs_per_worker)
+    # static plan verification (analysis/verifier): ``verify=None``
+    # follows the process default — on under tests/REPRO_VERIFY_PLANS,
+    # off on hot paths (and plan-cache *hits* never come through here).
+    # Imported lazily: the verifier depends on this module.
+    from ..analysis import verifier as _verifier
+    if _verifier.should_verify(verify):
+        _verifier.check_schedule(
+            sched, n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
+            head_dim=head_dim, in_dtype_bytes=in_dtype_bytes)
+        sched._verified = True
+    return sched
 
 
 def _block_meta(batch: BlockedBatch, bid: int

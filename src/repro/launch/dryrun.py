@@ -84,7 +84,9 @@ def _schedule_for(cfg: ModelConfig, shp, pods: int, cp: int,
     per_pod_batch = shp.global_batch // pods
     tpw = per_pod_batch * shp.seq_len // cp
     seqlens = [shp.seq_len] * per_pod_batch
-    return trainlib.build_schedule(cfg, pcfg, seqlens, cp, tpw), tpw
+    # dry runs are offline pre-flight checks: always verify the plan
+    return trainlib.build_schedule(cfg, pcfg, seqlens, cp, tpw,
+                                   verify=True), tpw
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,

@@ -77,7 +77,7 @@ def _param_dtype_bytes(cfg: ModelConfig) -> int:
 def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
                    n_cp: int, tokens_per_worker: int,
                    speeds: np.ndarray | None = None,
-                   mask=True) -> Schedule:
+                   mask=True, verify: bool | None = None) -> Schedule:
     tp = 1  # schedule is head-count agnostic (costs scale uniformly)
     nh, nkv = cfg.padded_heads(tp)
     return make_schedule(
@@ -87,7 +87,8 @@ def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
         coalesce=pcfg.coalesce, wire=pcfg.comm_dtype,
         in_dtype_bytes=pcfg.in_dtype_bytes,
         locality={"auto": "auto", "on": True, "off": False}.get(
-            str(pcfg.locality), pcfg.locality))
+            str(pcfg.locality), pcfg.locality),
+        verify=verify)
 
 
 def schedule_plan_key(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,

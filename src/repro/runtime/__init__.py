@@ -1,6 +1,6 @@
 import importlib
 
-from . import compression, fault_tolerance, wire
+from . import compression, wire
 
 
 def __getattr__(name):

@@ -16,14 +16,29 @@ schedule per distinct :class:`~repro.masks.MaskSpec`, and
 elastic event never silently collapses the per-layer-group scheduling to
 one mask.  The elastic restart example/test drives the full (1)-(3)
 loop, shrinking 4 -> 2 workers mid-run and growing back.
+
+The fault-tolerance loop lives here too (it is the other half of the
+same story — elasticity is what you do *after* surviving the fault):
+
+* ``resumable_train``: wraps a step function with periodic async
+  checkpoints and auto-resume from the newest committed checkpoint; an
+  injected/real failure mid-run (or mid-save — only COMMIT-marked
+  checkpoints are trusted) resumes bit-exactly.
+* ``StragglerTracker``: per-worker step-time EWMA -> relative speed
+  estimates.  Speeds feed Algorithm 1 (``distributor.assign_blocks``'s
+  ``speeds``) via ``replan(..., speeds=...)``, so a chronically slow
+  worker is assigned proportionally fewer blocks — FCP's load balancing
+  *is* the straggler mitigation, it just needs the measured speeds.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import numpy as np
 
+from ..checkpoint.manager import CheckpointManager
 from ..configs.base import ParallelConfig
 from ..core import plan_cache as pc
 from ..core.schedule import Schedule, make_schedule
@@ -41,7 +56,8 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            wire=None, in_dtype_bytes: float | None = None,
            speeds: np.ndarray | None = None,
            pcfg: ParallelConfig | None = None,
-           cache: pc.PlanCache | None = None) -> Schedule:
+           cache: pc.PlanCache | None = None,
+           verify: bool | None = True) -> Schedule:
     """Rebuild the FCP schedule for a new worker count.
 
     tokens_per_worker grows/shrinks to keep the global token budget; the
@@ -65,6 +81,12 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     different wire formats never share a cache entry.  For both knobs
     the precedence is uniform: an explicit argument wins, otherwise
     ``pcfg`` supplies it, otherwise the repo default.
+
+    Replans are statically verified by default (``verify=True`` —
+    :mod:`repro.analysis.verifier`): an elastic resize happens once per
+    fault, not per step, and a bad replan silently corrupts attention
+    for the rest of the run.  Pass ``verify=False`` (or ``None`` for
+    the process default) to opt out.
     """
     mask = coerce_mask(mask)
     if pcfg is not None:
@@ -87,7 +109,8 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
                              n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
                              head_dim=head_dim, mask=mask,
                              coalesce=coalesce, wire=wire,
-                             in_dtype_bytes=in_dtype_bytes, speeds=speeds)
+                             in_dtype_bytes=in_dtype_bytes, speeds=speeds,
+                             verify=verify)
 
     if cache is None:
         return build()
@@ -104,7 +127,8 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
                   wire=None, in_dtype_bytes: float | None = None,
                   speeds: np.ndarray | None = None,
                   pcfg: ParallelConfig | None = None,
-                  cache: pc.PlanCache | None = None
+                  cache: pc.PlanCache | None = None,
+                  verify: bool | None = True
                   ) -> dict[MaskSpec, Schedule]:
     """Rebuild one schedule per *distinct* mask for the new worker count.
 
@@ -123,8 +147,70 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
                         n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
                         head_dim=head_dim, mask=m, coalesce=coalesce,
                         wire=wire, in_dtype_bytes=in_dtype_bytes,
-                        speeds=speeds, pcfg=pcfg, cache=cache)
+                        speeds=speeds, pcfg=pcfg, cache=cache,
+                        verify=verify)
     return out
+
+
+# --------------------------------------------------------------------------
+# fault tolerance (absorbed from the retired runtime/fault_tolerance.py)
+# --------------------------------------------------------------------------
+
+class InjectedFailure(RuntimeError):
+    """Raised by tests to simulate a node preemption."""
+
+
+@dataclasses.dataclass
+class StragglerTracker:
+    n_workers: int
+    ewma: float = 0.3
+    _times: np.ndarray | None = None
+
+    def observe(self, per_worker_step_time: np.ndarray) -> None:
+        t = np.asarray(per_worker_step_time, dtype=np.float64)
+        if self._times is None:
+            self._times = t.copy()
+        else:
+            self._times = (1 - self.ewma) * self._times + self.ewma * t
+
+    def speeds(self) -> np.ndarray:
+        """Relative speeds normalized to max 1.0 (slow worker < 1)."""
+        if self._times is None:
+            return np.ones(self.n_workers)
+        s = self._times.min() / np.maximum(self._times, 1e-9)
+        return s
+
+    def has_straggler(self, threshold: float = 0.8) -> bool:
+        return bool((self.speeds() < threshold).any())
+
+
+def resumable_train(step_fn, init_state, *, manager: CheckpointManager,
+                    total_steps: int, checkpoint_every: int = 50,
+                    fail_at: int | None = None, blocking_ckpt: bool = False,
+                    on_step=None):
+    """Run ``state = step_fn(state, step)`` for ``total_steps``, resuming
+    from the newest committed checkpoint if one exists.
+
+    ``fail_at`` raises :class:`InjectedFailure` *before* executing that
+    step (tests restart the loop to prove recovery).  Returns the final
+    state."""
+    start = 0
+    state = init_state
+    latest = manager.latest_step()
+    if latest is not None:
+        state, extra = manager.restore(init_state)
+        start = int(extra["step"]) + 1
+    for step in range(start, total_steps):
+        if fail_at is not None and step == fail_at:
+            manager.wait()
+            raise InjectedFailure(f"injected failure at step {step}")
+        state = step_fn(state, step)
+        if on_step is not None:
+            on_step(step, state)
+        if (step + 1) % checkpoint_every == 0 or step == total_steps - 1:
+            manager.save(step, state, blocking=blocking_ckpt)
+    manager.wait()
+    return state
 
 
 def reshape_frames(arr: np.ndarray, new_n_workers: int) -> np.ndarray:

@@ -1,0 +1,17 @@
+"""Test-session defaults.
+
+Static plan verification (``repro.analysis.verifier``) is ON for every
+schedule built under the test suite: ``make_schedule`` / ``PlanCache``
+default their ``verify=None`` flag to this process-wide switch.  The
+env var (set before any schedule is built, since conftest imports run
+first) also propagates to the multidevice subprocess tests, which
+re-exec the interpreter with the parent's environment.
+"""
+
+import os
+
+os.environ.setdefault("REPRO_VERIFY_PLANS", "1")
+
+from repro.analysis import verifier  # noqa: E402
+
+verifier.set_default_verify(True)

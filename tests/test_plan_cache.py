@@ -174,7 +174,7 @@ def test_plan_ahead_propagates_builder_errors():
     cache = pc.PlanCache(max_size=4)
     planner = pc.PlanAheadPlanner(cache, enabled=True)
     try:
-        k = _key([1, 2, 3])
+        k = _key([4096])
 
         def boom():
             raise RuntimeError("planner exploded")

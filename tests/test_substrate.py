@@ -16,7 +16,7 @@ except ImportError:                       # minimal install: skip @given only
 from repro.checkpoint import CheckpointManager, checkpointer
 from repro.data import SyntheticLoader, distributions
 from repro.optimizer import adamw, grad_accum, schedules
-from repro.runtime import compression, elastic, fault_tolerance as ft
+from repro.runtime import compression, elastic
 
 
 # --------------------------------------------------------------------------
@@ -141,21 +141,21 @@ def test_resumable_train_recovers_from_failure(tmp_path):
 
     init = {"x": jnp.asarray(0.0)}
     mgr = CheckpointManager(tmp_path / "a", keep_n=3)
-    with pytest.raises(ft.InjectedFailure):
-        ft.resumable_train(step_fn, init, manager=mgr, total_steps=10,
+    with pytest.raises(elastic.InjectedFailure):
+        elastic.resumable_train(step_fn, init, manager=mgr, total_steps=10,
                            checkpoint_every=2, fail_at=7,
                            blocking_ckpt=True)
     # restart: resumes from step 5's checkpoint
-    final = ft.resumable_train(step_fn, init, manager=mgr, total_steps=10,
+    final = elastic.resumable_train(step_fn, init, manager=mgr, total_steps=10,
                                checkpoint_every=2, blocking_ckpt=True)
-    want = ft.resumable_train(
+    want = elastic.resumable_train(
         step_fn, init, manager=CheckpointManager(tmp_path / "b"),
         total_steps=10, checkpoint_every=100, blocking_ckpt=True)
     assert float(final["x"]) == float(want["x"]) == sum(range(10))
 
 
 def test_straggler_tracker_feeds_lpt():
-    tr = ft.StragglerTracker(n_workers=4)
+    tr = elastic.StragglerTracker(n_workers=4)
     for _ in range(10):
         tr.observe(np.array([1.0, 1.0, 1.0, 2.0]))   # worker 3 is 2x slow
     assert tr.has_straggler()

@@ -1,0 +1,353 @@
+"""Plan-integrity verifier: clean plans verify, seeded mutations are
+each caught by the *named* invariant, the fuzz harness sweeps clean,
+verification rides along elastic replans, the repo lints hold (and fail
+when they should), and cache hits pay zero verification overhead."""
+
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # minimal install: skip @given only
+    from _hypothesis_fallback import given, settings, st
+
+import repro.verify as verify_cli
+from repro.analysis import lints, verifier
+from repro.core import plan_cache as pc
+from repro.core import schedule as schedlib
+from repro.core.blocks import kv_dependencies
+from repro.core.schedule import make_schedule
+from repro.runtime import elastic
+
+# reference workload: mixed doc lengths, 4 workers, coalesced rounds
+# with a narrow tail round (so the misprice mutation has a group whose
+# +1 row stays inside the static table width)
+BASE = dict(seqlens=[7000, 500, 300, 4000, 2000, 2584], n_workers=4,
+            tokens_per_worker=4096, block_size=128, coalesce=4)
+
+
+def _sched(**kw):
+    cfg = dict(BASE)
+    cfg.update(kw)
+    return make_schedule(**cfg, verify=False)
+
+
+def _names(sched, **kw):
+    return sorted({x.invariant for x in
+                   verifier.verify_schedule(sched, **kw)})
+
+
+# --------------------------------------------------------------------------
+# clean plans verify
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {},
+    {"mask": "full"},
+    {"mask": "swa:1024", "coalesce": 8},
+    {"mask": "chunked:512", "wire": "int8", "in_dtype_bytes": 2.0},
+    {"n_workers": 2, "tokens_per_worker": 8192, "coalesce": 1},
+    {"speeds": np.array([1.0, 0.6, 1.2, 0.9])},
+])
+def test_real_plans_have_no_violations(kw):
+    s = _sched(**kw)
+    idb = kw.get("in_dtype_bytes", 4.0)
+    assert verifier.verify_schedule(s, in_dtype_bytes=idb) == []
+
+
+def test_check_schedule_returns_schedule_and_verified_flag():
+    s = make_schedule(**BASE, verify=True)
+    assert s._verified
+    assert verifier.check_schedule(s) is s
+
+
+# --------------------------------------------------------------------------
+# mutation-kill suite: each seeded corruption -> the named invariant
+# --------------------------------------------------------------------------
+
+def _mutate_swap_sends(s):
+    """Swap two distinct sends of one sender in one round: payloads land
+    in each other's receive slots, so consumers read the wrong block."""
+    a, spec = s.arrays, s.spec
+    for r in range(spec.n_rounds):
+        for w in range(spec.n_workers):
+            rows = [i for i in range(a.send_slot.shape[2])
+                    if a.send_slot[w, r, i] != spec.kv_trash]
+            if len(rows) >= 2 and (a.send_slot[w, r, rows[0]]
+                                   != a.send_slot[w, r, rows[1]]):
+                i, j = rows[0], rows[1]
+                tmp = int(a.send_slot[w, r, i])
+                a.send_slot[w, r, i] = a.send_slot[w, r, j]
+                a.send_slot[w, r, j] = tmp
+                return True
+    return False
+
+
+def _mutate_drop_arrival(s):
+    """Drop one arrival commit: the consumer's buffer slot never gets
+    the block."""
+    a, spec = s.arrays, s.spec
+    for r in range(spec.n_rounds):
+        for w in range(spec.n_workers):
+            for i in range(a.recv_slot.shape[2]):
+                if a.recv_slot[w, r, i] != spec.kv_trash:
+                    a.recv_slot[w, r, i] = spec.kv_trash
+                    return True
+    return False
+
+
+def _mutate_alias_recv(s):
+    """Alias two receive slots of one worker in one round: the second
+    arrival clobbers the first."""
+    a, spec = s.arrays, s.spec
+    for r in range(spec.n_rounds):
+        for w in range(spec.n_workers):
+            rows = [i for i in range(a.recv_slot.shape[2])
+                    if a.recv_slot[w, r, i] != spec.kv_trash]
+            if len(rows) >= 2 and (a.recv_slot[w, r, rows[0]]
+                                   != a.recv_slot[w, r, rows[1]]):
+                a.recv_slot[w, r, rows[1]] = a.recv_slot[w, r, rows[0]]
+                return True
+    return False
+
+
+def _mutate_dup_pair(s):
+    """Duplicate a computed (q, kv) pair onto a trash step of the same
+    run: coverage is no longer exactly-once."""
+    a, spec = s.arrays, s.spec
+    for w in range(spec.n_workers):
+        for r in range(spec.n_runs):
+            lo, hi = spec.run_starts[r], spec.run_starts[r + 1]
+            real = [t for t in range(lo, hi)
+                    if a.step_q[w, t] != spec.q_trash]
+            trash = [t for t in range(lo, hi)
+                     if a.step_q[w, t] == spec.q_trash]
+            if real and trash:
+                t0, t1 = real[0], trash[0]
+                a.step_q[w, t1] = a.step_q[w, t0]
+                a.step_kv[w, t1] = a.step_kv[w, t0]
+                a.step_kv_blk[w, t1] = a.step_kv_blk[w, t0]
+                return True
+    return False
+
+
+def _mutate_misprice(s):
+    """Inflate one group's static row height in a narrow round: the
+    spec now prices wire bytes the tables don't ship."""
+    spec = s.spec
+    for r, rnd in enumerate(spec.comm_rounds):
+        if rnd.n_rows < spec.comm_rows and rnd.groups:
+            gs = list(rnd.groups)
+            gs[-1] = schedlib.CommGroup(perm=gs[-1].perm,
+                                        rows=gs[-1].rows + 1)
+            rounds = list(spec.comm_rounds)
+            rounds[r] = schedlib.CommRound(groups=tuple(gs))
+            s.spec = dataclasses.replace(spec, comm_rounds=tuple(rounds))
+            return True
+    return False
+
+
+MUTATIONS = [
+    ("swap-sends", _mutate_swap_sends, "arrival-before-use"),
+    ("drop-arrival", _mutate_drop_arrival, "arrival-before-use"),
+    ("alias-recv", _mutate_alias_recv, "recv-slot-liveness"),
+    ("dup-pair", _mutate_dup_pair, "coverage"),
+    ("misprice", _mutate_misprice, "byte-accounting"),
+]
+
+
+@pytest.fixture(scope="module")
+def base_schedule():
+    return make_schedule(**BASE, verify=True)
+
+
+@pytest.mark.parametrize("name,mutate,expected",
+                         [pytest.param(*m, id=m[0]) for m in MUTATIONS])
+def test_mutation_killed_by_named_invariant(base_schedule, name, mutate,
+                                            expected):
+    s = copy.deepcopy(base_schedule)
+    assert mutate(s), f"mutation {name} found no site in the base plan"
+    flagged = _names(s)
+    assert expected in flagged, \
+        f"{name}: expected [{expected}], verifier flagged {flagged}"
+    with pytest.raises(verifier.PlanVerificationError):
+        verifier.check_schedule(s)
+
+
+def test_mutation_sites_do_not_overlap_clean_baseline(base_schedule):
+    # deepcopy itself must not trip the verifier (mutations are real)
+    assert verifier.verify_schedule(copy.deepcopy(base_schedule)) == []
+
+
+# --------------------------------------------------------------------------
+# plan-key consistency
+# --------------------------------------------------------------------------
+
+def test_plan_key_mismatch_is_flagged():
+    s = _sched()
+    good = pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4)
+    assert verifier.verify_plan_key(good, s) == []
+    for bad in [
+        pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=2),
+        pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4,
+                    mask="swa:256"),
+        pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4,
+                    wire="int8"),
+        pc.plan_key([4096] * 4, 4, 4096, 128, coalesce=4),
+    ]:
+        out = verifier.verify_plan_key(bad, s)
+        assert out and all(v.invariant == "spec-key-consistency"
+                           for v in out)
+
+
+# --------------------------------------------------------------------------
+# fuzz harness (bounded in-suite sweep; CI runs 200 via the CLI)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_fuzz_sweep_is_clean(seed):
+    assert verify_cli.fuzz(30, seed) == 0
+
+
+def test_fuzz_cli_single_plan_mode(capsys):
+    rc = verify_cli.main([
+        "--seqlens", "7000,500,300,4000,2000,2584", "--workers", "4",
+        "--block-size", "128", "--coalesce", "4", "--mask", "swa:1024",
+        "--wire", "int8", "--in-dtype-bytes", "2"])
+    assert rc == 0
+    assert "ok: plan verified" in capsys.readouterr().out
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2), st.integers(1, 4),
+       st.integers(0, 3))
+def test_random_geometry_verifies(n_workers, bs_idx, coalesce, mask_idx):
+    bs = (16, 32, 64)[bs_idx]
+    tpw = 4 * bs
+    mask = ("causal", "full", f"swa:{2 * bs}", f"chunked:{2 * bs}")[
+        mask_idx]
+    total = n_workers * tpw
+    seqlens = [total // 2, total // 4, total - total // 2 - total // 4]
+    s = make_schedule([x for x in seqlens if x > 0], n_workers, tpw, bs,
+                      mask=mask, coalesce=coalesce, verify=False)
+    assert verifier.verify_schedule(s) == []
+
+
+# --------------------------------------------------------------------------
+# elastic replans verify (and survive a shrink/grow cycle)
+# --------------------------------------------------------------------------
+
+def test_replan_across_resize_keeps_coverage_and_restore():
+    seqlens = BASE["seqlens"]
+    heads = dict(n_q_heads=8, n_kv_heads=8, head_dim=64)
+    cache = pc.PlanCache(max_size=8, verify=True)
+    # 4 -> 2 -> 4 workers; replan verifies by default (verify=True), so
+    # a coverage or restore break raises PlanVerificationError here
+    for n in (4, 2, 4):
+        s = elastic.replan(seqlens, n, BASE["block_size"], **heads,
+                           mask="swa:1024", coalesce=4, cache=cache)
+        assert s.spec.n_workers == n
+        # explicit double-check of the two invariants the resize
+        # regression guards: exact coverage + restore completeness
+        v = verifier.verify_schedule(s, **heads)
+        assert [x for x in v if x.invariant in
+                ("coverage", "table-well-formedness")] == []
+    assert cache.stats.verified > 0
+
+
+def test_replan_groups_verifies_every_mask():
+    masks = ["causal", "swa:1024", "causal", "chunked:512"]
+    out = elastic.replan_groups(
+        BASE["seqlens"], 2, BASE["block_size"], masks,
+        n_q_heads=4, n_kv_heads=4, head_dim=64, coalesce=2)
+    assert len(out) == 3                   # duplicates collapse
+    for s in out.values():
+        assert s._verified
+
+
+# --------------------------------------------------------------------------
+# repo lints
+# --------------------------------------------------------------------------
+
+def test_lints_pass_on_repo():
+    assert lints.run_all() == []
+
+
+def test_reflection_lint_fails_on_unkeyed_spec_field():
+    errors = lints.check_spec_key_coverage(extra_fields=["new_knob"])
+    assert len(errors) == 1
+    assert "new_knob" in errors[0] and "plan_key" in errors[0]
+
+
+def test_lint_cli_exit_status(capsys):
+    assert lints.main([]) == 0
+    assert "repro lints: OK" in capsys.readouterr().out
+
+
+# --------------------------------------------------------------------------
+# zero verification overhead on plan-cache hits
+# --------------------------------------------------------------------------
+
+def test_cache_hits_never_verify(monkeypatch):
+    cache = pc.PlanCache(max_size=4, verify=True)
+    key = pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4)
+    s = cache.get_or_build(key, lambda: _sched())
+    assert cache.stats.verified == 1 and cache.stats.misses == 1
+
+    calls = {"n": 0}
+
+    def boom(*a, **kw):
+        calls["n"] += 1
+        raise AssertionError("verifier ran on a cache hit")
+
+    monkeypatch.setattr(verifier, "verify_schedule", boom)
+    monkeypatch.setattr(verifier, "verify_plan_key", boom)
+    for _ in range(5):
+        assert cache.get_or_build(key, lambda: _sched()) is s
+    assert calls["n"] == 0
+    assert cache.stats.verified == 1 and cache.stats.hits == 5
+
+
+def test_preverified_schedule_skips_full_recheck(monkeypatch):
+    cache = pc.PlanCache(max_size=4, verify=True)
+    key = pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4)
+    s = make_schedule(**BASE, verify=True)      # full check happens here
+
+    def full_boom(*a, **kw):
+        raise AssertionError("insert re-ran the full invariant check")
+
+    monkeypatch.setattr(verifier, "check_schedule", full_boom)
+    assert cache.insert(key, s) is s            # only the key check runs
+    assert cache.stats.verified == 1
+
+
+def test_verify_off_is_free(monkeypatch):
+    prev = verifier.set_default_verify(False)
+    try:
+        cache = pc.PlanCache(max_size=4)        # verify=None -> default
+
+        def boom(*a, **kw):
+            raise AssertionError("verification ran with default off")
+
+        monkeypatch.setattr(verifier, "verify_schedule", boom)
+        key = pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4)
+        cache.get_or_build(key, lambda: _sched())
+        assert cache.stats.verified == 0
+    finally:
+        verifier.set_default_verify(prev)
+
+
+# --------------------------------------------------------------------------
+# dependency-set sanity: the verifier recomputes coverage independently
+# --------------------------------------------------------------------------
+
+def test_verifier_coverage_matches_kv_dependencies():
+    s = _sched(mask="swa:1024")
+    deps = kv_dependencies(s.batch, s.spec.mask)
+    n_pairs = sum(len(d) for d in deps)
+    a, spec = s.arrays, s.spec
+    computed = int((a.step_q != spec.q_trash).sum())
+    assert computed == n_pairs
