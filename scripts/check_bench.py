@@ -42,6 +42,27 @@ WIRE_LIMITS = {
     "int8_grad_err": 3e-2,
 }
 
+# Absolute fault-tolerance contracts (ISSUE 7 acceptance).  Single
+# source: benchmarks/bench_elastic.py imports these for its in-bench
+# asserts, so the drill, the bench, and the CI gate agree by
+# construction; README/CONTRIBUTING quote the same numbers.
+ELASTIC_LIMITS = {
+    # mid-step worker loss: steps lost <= checkpoint_every (the bench
+    # checkpoints every 2), and the replayed survivor run must match an
+    # uninterrupted survivor run (normalized loss diff)
+    "steps_lost": 2.0,
+    "post_recovery_max_loss_diff": 1e-6,
+    # closed-loop demotion: a 2x-slow worker is demoted within the
+    # hysteresis window + cooldown slack, and the demoted placement's
+    # modeled step time beats uniform placement under the real skew
+    "steps_to_demote": 7.0,
+    "post_demotion_step_ratio": 0.9,
+    # healthy path: telemetry adds no recompiles and the plan-cache
+    # hit rate stays at the amortized-planning contract level
+    "healthy_hit_rate": 0.9,
+    "healthy_recompiles_after_warmup": 0.0,
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class Gate:
@@ -87,6 +108,27 @@ GATES: dict[str, list[Gate]] = {
              lower_is_better=True, limit=0.0),
         Gate("wire_formats.int8.recompiles_after_warmup",
              lower_is_better=True, limit=0.0),
+    ],
+    "BENCH_elastic.json": [
+        # mid-step worker loss: restore wall clock is baseline-relative
+        # (calibration-normalized); step loss and replay fidelity are
+        # absolute contracts
+        Gate("kill.restore_ms", lower_is_better=True, normalize=True,
+             rel_tol=0.5),      # ms-scale host work: generous tol
+        Gate("kill.steps_lost", lower_is_better=True,
+             limit=ELASTIC_LIMITS["steps_lost"]),
+        Gate("kill.post_recovery_max_loss_diff", lower_is_better=True,
+             limit=ELASTIC_LIMITS["post_recovery_max_loss_diff"]),
+        # closed-loop straggler demotion
+        Gate("straggler.steps_to_demote", lower_is_better=True,
+             limit=ELASTIC_LIMITS["steps_to_demote"]),
+        Gate("straggler.post_demotion_step_ratio", lower_is_better=True,
+             limit=ELASTIC_LIMITS["post_demotion_step_ratio"]),
+        # healthy path: telemetry must be free
+        Gate("healthy.hit_rate", lower_is_better=False,
+             limit=ELASTIC_LIMITS["healthy_hit_rate"]),
+        Gate("healthy.recompiles_after_warmup", lower_is_better=True,
+             limit=ELASTIC_LIMITS["healthy_recompiles_after_warmup"]),
     ],
     "BENCH_planner.json": [
         Gate("steady_state.plan_cold_ms_median", lower_is_better=True,
@@ -171,13 +213,27 @@ def main(argv=None) -> int:
                    help="directory holding the just-generated results")
     p.add_argument("--rel-tol", type=float, default=0.15,
                    help="allowed relative regression (default 15%%)")
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of BENCH_*.json files to "
+                        "gate (CI jobs produce different files; without "
+                        "this, a job that ran only the executor benches "
+                        "would fail on the missing elastic results)")
     args = p.parse_args(argv)
+
+    names = list(GATES)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in GATES]
+        if unknown:
+            print(f"--only names not gated: {unknown}; "
+                  f"known: {sorted(GATES)}")
+            return 2
 
     base_dir = pathlib.Path(args.baseline)
     fresh_dir = pathlib.Path(args.fresh)
     failures: list[str] = []
     checked = 0
-    for name in GATES:
+    for name in names:
         bp, fp = base_dir / name, fresh_dir / name
         if not bp.exists():
             print(f"{name}: no committed baseline — skipped "

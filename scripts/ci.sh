@@ -5,6 +5,7 @@
 #   scripts/ci.sh verify       # repo lints + plan-fuzzing harness
 #   scripts/ci.sh test         # fast tier-1 suite + benches + regression gate
 #   scripts/ci.sh multidevice  # slow 8-host-device subprocess suites
+#   scripts/ci.sh fault-drill  # worker-loss/straggler drill + elastic bench
 #   scripts/ci.sh all          # everything, in CI job order
 #
 # Set SKIP_INSTALL=1 to reuse the current environment as-is.
@@ -41,6 +42,10 @@ run_verify() {
         python -m repro.analysis.lints
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m repro.verify --fuzz --plans 200 --seed 0
+    # survivor-set replan fuzzing: kill each worker, verify the
+    # survivor schedule, regrow and assert the plan cache re-hits
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.verify --fuzz-elastic --plans 50 --seed 0
 }
 
 run_test() {
@@ -55,14 +60,31 @@ run_test() {
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.bench_planner --quick \
         --out bench_out/BENCH_planner.json
-    python scripts/check_bench.py --baseline . --fresh bench_out
+    python scripts/check_bench.py --baseline . --fresh bench_out \
+        --only BENCH_executor.json,BENCH_planner.json
 }
 
 run_multidevice() {
     install
+    # the fault drill has its own job (run_fault_drill) for CI parity
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python -m pytest -q -m slow tests/test_multidevice.py
+        python -m pytest -q -m slow tests/test_multidevice.py \
+        --deselect tests/test_multidevice.py::test_fault_drill_multidevice
+}
+
+run_fault_drill() {
+    install
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -q \
+        tests/test_multidevice.py::test_fault_drill_multidevice
+    mkdir -p bench_out
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.bench_elastic \
+        --out bench_out/BENCH_elastic.json
+    python scripts/check_bench.py --baseline . --fresh bench_out \
+        --only BENCH_elastic.json
 }
 
 case "$job" in
@@ -70,8 +92,11 @@ case "$job" in
     verify)       run_verify ;;
     test)         run_test ;;
     multidevice)  run_multidevice ;;
-    all)          run_lint; run_verify; run_test; run_multidevice ;;
+    fault-drill)  run_fault_drill ;;
+    all)          run_lint; run_verify; run_test; run_multidevice;
+                  run_fault_drill ;;
     *)
-        echo "usage: scripts/ci.sh [lint|verify|test|multidevice|all]" >&2
+        echo "usage: scripts/ci.sh" \
+             "[lint|verify|test|multidevice|fault-drill|all]" >&2
         exit 2 ;;
 esac

@@ -18,6 +18,24 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_n = keep_n
         self._pending: list[threading.Thread] = []
+        self._sweep_stale()
+
+    def _sweep_stale(self) -> None:
+        """Crash hygiene: a worker lost mid-save leaves a ``step_N.tmp``
+        (or a renamed-but-uncommitted ``step_N``) behind — never
+        restorable (restore trusts only COMMIT markers) but holding
+        disk forever.  Swept on construction; callers are single-writer
+        per directory (the supervised recovery path re-uses one manager
+        instance, so this never races its own async saves)."""
+        for p in self.dir.iterdir():
+            if not p.is_dir():
+                continue
+            if p.name.endswith(".tmp"):
+                shutil.rmtree(p, ignore_errors=True)
+                continue
+            m = _STEP_RE.match(p.name)
+            if m and not checkpointer.is_committed(p):
+                shutil.rmtree(p, ignore_errors=True)
 
     def _path(self, step: int) -> pathlib.Path:
         return self.dir / f"step_{step}"

@@ -173,6 +173,21 @@ class ParallelConfig:
     plan_buckets: int = 0
     plan_cache_size: int = 64
     plan_ahead: bool = True
+    # runtime health telemetry (runtime/health.py), consumed by the
+    # supervised train loop: consecutive straggler observations before
+    # a demotion replan fires (hysteresis), the relative speed below
+    # which a worker counts as a straggler, the heartbeat timeout (s)
+    # that declares a worker lost, and the minimum steps between
+    # demote/promote events (rate limit — with speed quantization this
+    # bounds how fast oscillating measurements can change plan keys).
+    # checkpoint_every is the periodic-checkpoint cadence that bounds
+    # step loss on recovery.  All ride ParallelConfig so elastic
+    # replans preserve them like every other knob.
+    health_window: int = 8
+    straggler_threshold: float = 0.8
+    step_timeout: float = 60.0
+    demote_cooldown: int = 16
+    checkpoint_every: int = 10
 
 
 @dataclasses.dataclass(frozen=True)

@@ -62,6 +62,15 @@ def assign_blocks(
     if speeds is None:
         speeds = np.ones(n_workers)
     speeds = np.asarray(speeds, dtype=np.float64)
+    if speeds.shape != (n_workers,):
+        raise ValueError(
+            f"speeds has shape {speeds.shape}, expected ({n_workers},) — "
+            f"resize the tracker/monitor after an elastic event")
+    # a zero/negative speed (a dead worker in a stale measurement) would
+    # send that worker's load to inf and starve it while every schedule
+    # table still routes blocks through it — losing a worker is an
+    # elastic replan on the survivors, never a speed of 0
+    speeds = np.clip(speeds, 1e-3, None)
     if mem_limit is None:
         mem_limit = float(np.sum(memory)) / n_workers
     cap = mem_limit * (1.0 + delta)

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -301,6 +302,22 @@ def schedule_tables(sched: Schedule) -> dict[str, jax.Array]:
         tables = plan_tables(sched.arrays)
         sched._device_tables = tables
     return tables
+
+
+def timed_call(fn, *args):
+    """Health-telemetry timing hook for the host train loop:
+    ``out, seconds = timed_call(jitted_step, *args)``.
+
+    The wall clock is device-sync'd by blocking on the outputs *after*
+    dispatch — nothing is added inside jit (zero recompiles, zero extra
+    collectives), and a caller that would block on the outputs anyway
+    (loss logging, checkpointing) pays nothing on the healthy path.
+    Feeds :class:`repro.runtime.health.HealthMonitor.observe`.
+    """
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
 
 
 # --------------------------------------------------------------------------

@@ -23,17 +23,20 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..checkpoint.manager import CheckpointManager
 from ..configs.base import (ModelConfig, ParallelConfig, TrainConfig,
                             apply_overrides, get_config, smoke_config)
 from ..core import executor as ex
 from ..core import plan_cache as pc
 from ..core.schedule import Schedule, make_schedule
-from ..data.loader import Batch, SyntheticLoader
+from ..data.loader import Batch, LoaderState, SyntheticLoader
 from ..masks import MaskSpec, coerce_mask, parse_mask
 from ..models import Model, dense_attn_fn
 from ..optimizer import adamw, schedules
 from ..parallel import sharding as sh
 from ..runtime import compression
+from ..runtime import elastic
+from ..runtime import health as health_mod
 
 
 def make_fcp_attn_fn(sched: Schedule, mesh, pcfg: ParallelConfig
@@ -184,6 +187,329 @@ def batch_arrays(b: Batch, cfg: ModelConfig, rng=None) -> dict:
     return out
 
 
+def route_layers(cfg: ModelConfig, layer_masks, group_masks, fn_of_mask):
+    """One shared attention closure when the model is mask-uniform, else
+    the per-layer sequence the model unrolls over (per-layer-group
+    scheduling)."""
+    if len(group_masks) == 1:
+        return fn_of_mask(group_masks[0])
+    if cfg.family not in ("dense", "moe", "audio", "vlm"):
+        raise ValueError(
+            f"per-layer attention-mask patterns are not supported for "
+            f"family {cfg.family!r} (shared/absent attention)")
+    by_mask = {m: fn_of_mask(m) for m in group_masks}
+    return tuple(by_mask[m] for m in layer_masks)
+
+
+# --------------------------------------------------------------------------
+# fault-tolerant supervised loop (runtime health closed loop)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepRecord:
+    """One committed step, for drills/benches to diff against."""
+    step: int
+    loss: float
+    gnorm: float
+    n_workers: int
+    ms: float
+
+
+class Supervisor:
+    """Fault-tolerant elastic FCP training driver.
+
+    Owns model/optimizer state, a *geometry-pinned* data loader, a
+    :class:`~repro.runtime.health.HealthMonitor`, a shared plan cache
+    (+ plan-ahead thread), and an optional checkpoint manager, and
+    closes the measurement -> placement -> recovery loop around the
+    jitted train step:
+
+    * **healthy path** — identical work to the plain CLI loop (plan
+      cache, plan-ahead, bounded compiled-step cache) plus one
+      device-sync'd wall clock per step (``executor.timed_call`` — the
+      loop blocks on the loss anyway).  The monitor's planning speeds
+      stay ``None`` while healthy, so plan-cache keys are byte-identical
+      to a monitor-less run: zero added recompiles.
+    * **straggler path** — when the monitor's hysteresis window fills,
+      its latched quantized speeds flow into cache-backed
+      ``elastic.replan(speeds=...)`` so the chronically slow worker is
+      assigned proportionally fewer (or cheaper) blocks; demote/promote
+      events are rate-limited (``demote_cooldown``) and logged.
+    * **loss path** — on :class:`~repro.runtime.health.WorkerLoss` or
+      :class:`~repro.runtime.elastic.InjectedFailure` the fleet shrinks
+      to the survivors (new mesh, ``elastic.replan`` on the survivor
+      set), the newest committed checkpoint restores, and the
+      deterministic data stream replays — losing at most
+      ``checkpoint_every`` steps.
+
+    The loader is pinned to the *original* ``n_workers x
+    tokens_per_worker`` geometry no matter the current fleet: the
+    global token stream is a pure function of ``(seed, step)`` and must
+    not change shape under elasticity, so survivor fleets view the same
+    stream through ``elastic.reshape_frames`` (re-deriving the trailing
+    padding for the replanned frame geometry).
+    """
+
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig,
+                 tcfg: TrainConfig, *, n_workers: int,
+                 tokens_per_worker: int, dist: str = "uniform",
+                 uniform_len: int = 1024, fresh: bool = False,
+                 checkpoint_dir=None,
+                 monitor: "health_mod.HealthMonitor | None" = None,
+                 start_fleet: int | None = None, verbose: bool = True):
+        self.cfg, self.pcfg, self.tcfg = cfg, pcfg, tcfg
+        self.n0 = int(n_workers)
+        self.tpw0 = int(tokens_per_worker)
+        self.n = int(start_fleet) if start_fleet else self.n0
+        self.verbose = verbose
+        if not (cfg.uses_attention and cfg.n_layers):
+            raise ValueError("Supervisor drives FCP attention models")
+        self.model = Model(cfg, tp=1)
+        self.loader = SyntheticLoader(
+            dist=dist, n_frames=self.n0, tokens_per_worker=self.tpw0,
+            vocab_size=cfg.vocab_size, seed=tcfg.seed,
+            uniform_len=uniform_len, plan_buckets=pcfg.plan_buckets,
+            bucket_min_len=pcfg.block_size, fresh=fresh)
+        self.monitor = monitor or health_mod.HealthMonitor.from_pcfg(
+            self.n, pcfg)
+        self.plan_cache = pc.PlanCache(pcfg.plan_cache_size)
+        self.planner = pc.PlanAheadPlanner(self.plan_cache,
+                                           enabled=pcfg.plan_ahead)
+        self.manager = (CheckpointManager(checkpoint_dir)
+                        if checkpoint_dir else None)
+        self.params = self.model.init(jax.random.key(tcfg.seed))
+        self.opt = adamw.init(self.params)
+        self.residual = (compression.init_residuals(self.params)
+                         if tcfg.grad_compression else None)
+        # host copies of step 0 (np.array forces real copies — the live
+        # jax buffers are donated every step): checkpointless recovery
+        # falls back to replaying from scratch
+        self._init_tree = jax.tree.map(
+            lambda x: np.array(x),
+            {"params": self.params, "opt": self.opt})
+        self.layer_masks = layer_mask_specs(cfg, pcfg)
+        self.group_masks = list(dict.fromkeys(self.layer_masks))
+        nh, nkv = cfg.padded_heads(1)
+        self._heads = (max(nh, 1), max(nkv, 1), max(cfg.head_dim, 1))
+        self._meshes: dict = {}
+        self._step_cache: dict = {}
+        self.compiled_at: list[int] = []     # steps that built a new jit
+        self.history: list[StepRecord] = []
+        self.recoveries: list[dict] = []
+        self.last_scheds: dict = {}
+
+    # -- geometry ----------------------------------------------------------
+
+    def _mesh(self, n: int):
+        if n not in self._meshes:
+            from .mesh import make_mesh
+            self._meshes[n] = make_mesh((n, 1), ("data", "model"))
+        return self._meshes[n]
+
+    def _fleet_batch(self, b: Batch, n: int, tpw: int) -> Batch:
+        """Reshape the pinned-geometry batch onto the current fleet:
+        same global token stream, padding re-derived (segment ids pad
+        with -1 so padding never aliases a document)."""
+        n_valid = int(sum(b.seqlens))
+
+        def rs(a, fill=0):
+            return elastic.reshape_frames(a, n, tpw, n_valid=n_valid,
+                                          fill=fill)
+        return Batch(tokens=rs(b.tokens), labels=rs(b.labels),
+                     positions=rs(b.positions),
+                     seg_ids=rs(b.seg_ids, fill=-1),
+                     loss_mask=rs(b.loss_mask), seqlens=b.seqlens,
+                     composition_id=b.composition_id)
+
+    # -- planning ----------------------------------------------------------
+
+    def _group_key(self, seqlens, n: int, m, speeds) -> tuple:
+        return elastic.replan_key(seqlens, n, self.pcfg.block_size,
+                                  mask=m, speeds=speeds, pcfg=self.pcfg)
+
+    def _group_build(self, seqlens, n: int, m, speeds):
+        nh, nkv, hd = self._heads
+        return functools.partial(
+            elastic.replan, seqlens, n, self.pcfg.block_size,
+            n_q_heads=nh, n_kv_heads=nkv, head_dim=hd, mask=m,
+            speeds=None if speeds is None else np.asarray(speeds),
+            pcfg=self.pcfg, verify=None)
+
+    def _plan(self, seqlens, n: int, speeds):
+        """One cache-backed survivor replan per distinct mask group,
+        under the exact keys ``elastic.replan`` uses — a re-grown fleet
+        re-hits its pre-shrink plans."""
+        scheds: dict[MaskSpec, Schedule] = {}
+        keys = []
+        for m in self.group_masks:
+            key = self._group_key(seqlens, n, m, speeds)
+            scheds[m] = self.planner.get(
+                key, self._group_build(seqlens, n, m, speeds))
+            keys.append(key)
+        return scheds, tuple(keys)
+
+    def _prefetch(self, seqlens, n: int, speeds) -> None:
+        for m in self.group_masks:
+            self.planner.prefetch(
+                self._group_key(seqlens, n, m, speeds),
+                self._group_build(seqlens, n, m, speeds))
+
+    def _step_fn(self, step: int, n: int, keys: tuple, scheds, batch):
+        ck = (n, keys)
+        if ck not in self._step_cache:
+            mesh = self._mesh(n)
+            attn = route_layers(
+                self.cfg, self.layer_masks, self.group_masks,
+                lambda m: make_fcp_attn_fn(scheds[m], mesh, self.pcfg))
+            ts = build_train_step(self.model, mesh, self.pcfg,
+                                  self.tcfg, attn)
+            self._step_cache[ck] = jit_train_step(
+                ts, mesh, self.params, self.opt, self.residual, batch)
+            self.compiled_at.append(step)
+            while len(self._step_cache) > max(self.pcfg.plan_cache_size,
+                                              1):
+                self._step_cache.pop(next(iter(self._step_cache)))
+        return self._step_cache[ck]
+
+    # -- checkpointing -----------------------------------------------------
+
+    def _save(self, step: int) -> None:
+        if self.manager is None:
+            return
+        self.manager.save(
+            step, {"params": self.params, "opt": self.opt},
+            extra={"loader": self.loader.state.to_dict(),
+                   "n_workers": self.n}, blocking=False)
+
+    def _restore(self) -> int:
+        """Roll state back to the newest committed checkpoint (or step 0
+        from the held initial copies) and return the resume step.  The
+        loader state rewinds with the weights, so the replayed stream
+        is bit-identical to the first pass (pure in ``(seed, step)``)."""
+        if self.manager is not None and self.manager.latest_step() is not None:
+            tree, extra = self.manager.restore(
+                {"params": self.params, "opt": self.opt})
+            self.params = jax.tree.map(jnp.asarray, tree["params"])
+            self.opt = jax.tree.map(jnp.asarray, tree["opt"])
+            self.loader.state = LoaderState.from_dict(extra["loader"])
+            return int(extra["step"]) + 1
+        self.params = jax.tree.map(jnp.asarray, self._init_tree["params"])
+        self.opt = jax.tree.map(jnp.asarray, self._init_tree["opt"])
+        self.loader.state = LoaderState(step=0, seed=self.tcfg.seed)
+        return 0
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self, total_steps: int, *, fail=None, skew=None) -> dict:
+        """Train to ``total_steps``, surviving worker loss.
+
+        ``fail`` (an :class:`~repro.runtime.elastic.InjectedFailure`
+        with ``worker``/``step``/``round`` set) kills that worker
+        mid-step once; ``skew`` maps worker id -> slowdown factor for
+        the telemetry (sim stand-in for a degraded chip).  Auto-resumes
+        from the newest committed checkpoint when one exists."""
+        step = 0
+        if self.manager is not None and self.manager.latest_step() is not None:
+            step = self._restore()
+        while step < total_steps:
+            try:
+                step = self._run_steps(step, total_steps, fail, skew)
+            except (health_mod.WorkerLoss,
+                    elastic.InjectedFailure) as e:
+                t0 = time.perf_counter()
+                at = int(getattr(e, "step", None) or step)
+                lost = int(getattr(e, "worker", None) or 0) % self.n
+                survivors = [i for i in range(self.n) if i != lost]
+                if not survivors:
+                    raise
+                if isinstance(e, elastic.InjectedFailure):
+                    self.monitor.note_failure(
+                        at, lost, detail=f"injected at round {e.round}")
+                self.monitor.resize(survivors)
+                self.n = len(survivors)
+                resume = self._restore()
+                self.recoveries.append({
+                    "failed_step": at,
+                    "worker": lost, "resume_step": resume,
+                    "steps_lost": at - resume,
+                    "n_workers": self.n,
+                    "wall_s": time.perf_counter() - t0})
+                if self.verbose:
+                    print(f"[supervisor] lost worker {lost} "
+                          f"({e}); replanning on {self.n} survivors, "
+                          f"resuming at step {resume}", flush=True)
+                step = resume
+                fail = None                  # consumed
+        self.planner.shutdown()
+        if self.manager is not None:
+            self.manager.wait()
+        return self.summary()
+
+    def _run_steps(self, start: int, total: int, fail, skew) -> int:
+        n = self.n
+        skew_vec = None
+        if skew:
+            skew_vec = np.ones(n)
+            for w, f in dict(skew).items():
+                if 0 <= int(w) < n:
+                    skew_vec[int(w)] = float(f)
+        for step in range(start, total):
+            b = self.loader.next()
+            if (fail is not None and step == int(fail.step)
+                    and int(fail.worker) < n):
+                # mid-step: the batch was fetched and the round loop
+                # "started" — the step never commits, and the loader
+                # state is intentionally left advanced; recovery must
+                # rewind it from the checkpoint (replay proof)
+                raise fail
+            speeds = self.monitor.planning_speeds()
+            scheds, keys = self._plan(b.seqlens, n, speeds)
+            batch = batch_arrays(
+                self._fleet_batch(
+                    b, n,
+                    elastic.replan_tpw(b.seqlens, n,
+                                       self.pcfg.block_size)),
+                self.cfg)
+            fn = self._step_fn(step, n, keys, scheds, batch)
+            if step + 1 < total:
+                self._prefetch(self.loader.peek_seqlens(), n, speeds)
+            out, dt = ex.timed_call(fn, self.params, self.opt,
+                                    self.residual, batch)
+            self.params, self.opt, self.residual, loss, gnorm = out
+            self.monitor.observe(
+                step, health_mod.per_worker_times(dt, n, skew_vec))
+            ev = self.monitor.maybe_replan(step)
+            if ev is not None and self.verbose:
+                print(f"[supervisor] {ev.kind} workers {ev.workers} "
+                      f"at step {step} (speeds {ev.speeds}): "
+                      f"{ev.detail}", flush=True)
+            self.monitor.check(step)
+            self.history.append(StepRecord(step, float(loss),
+                                           float(gnorm), n, dt * 1e3))
+            self.last_scheds = scheds
+            every = max(int(self.pcfg.checkpoint_every), 0)
+            if every and (step + 1) % every == 0:
+                self._save(step)
+            if self.verbose:
+                print(f"step {step:5d}  loss {float(loss):.4f}  "
+                      f"gnorm {float(gnorm):.3f}  "
+                      f"[{n}w {dt * 1e3:.0f}ms]", flush=True)
+        return total
+
+    def summary(self) -> dict:
+        s = self.plan_cache.stats
+        return {
+            "steps": len(self.history),
+            "n_workers": self.n,
+            "recoveries": self.recoveries,
+            "events": [dataclasses.asdict(e)
+                       for e in self.monitor.events],
+            "compiles": len(self.compiled_at),
+            "plan_cache": s.to_dict(),
+            "plan_ahead_hits": self.planner.prefetched_hits,
+        }
+
+
 # --------------------------------------------------------------------------
 # CLI driver
 # --------------------------------------------------------------------------
@@ -243,6 +569,26 @@ def main(argv=None):
     p.add_argument("--lr", type=float, default=3e-4)
     p.add_argument("--override", action="append", default=[])
     p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-every", type=int, default=10,
+                   help="periodic-checkpoint cadence in steps (bounds"
+                        " the steps lost to a mid-step worker failure)")
+    p.add_argument("--supervised", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="fault-tolerant supervised loop for single-pod"
+                        " FCP runs: health telemetry, closed-loop"
+                        " straggler demotion, checkpoint/replay recovery"
+                        " (--no-supervised forces the plain loop)")
+    p.add_argument("--health-window", type=int, default=8,
+                   help="consecutive straggler observations before a"
+                        " demotion replan fires (hysteresis)")
+    p.add_argument("--straggler-threshold", type=float, default=0.8,
+                   help="relative speed below which a worker is a"
+                        " straggler")
+    p.add_argument("--step-timeout", type=float, default=60.0,
+                   help="heartbeat timeout (s) declaring a worker lost")
+    p.add_argument("--demote-cooldown", type=int, default=16,
+                   help="minimum steps between demote/promote replans"
+                        " (rate-limits plan churn)")
     p.add_argument("--log-every", type=int, default=1)
     args = p.parse_args(argv)
 
@@ -274,8 +620,34 @@ def main(argv=None):
                           in_dtype_bytes=_param_dtype_bytes(cfg),
                           plan_buckets=args.plan_buckets,
                           plan_cache_size=args.plan_cache_size,
-                          plan_ahead=args.plan_ahead)
+                          plan_ahead=args.plan_ahead,
+                          health_window=args.health_window,
+                          straggler_threshold=args.straggler_threshold,
+                          step_timeout=args.step_timeout,
+                          demote_cooldown=args.demote_cooldown,
+                          checkpoint_every=args.checkpoint_every)
     tcfg = TrainConfig(lr=args.lr, warmup_steps=2, total_steps=args.steps)
+
+    if (args.supervised and cfg.uses_attention and n_cp > 1
+            and pods == 1 and tp == 1):
+        # single-pod FCP: the fault-tolerant supervised loop (health
+        # telemetry + closed-loop demotion + checkpoint/replay
+        # recovery); other topologies keep the plain loop below
+        sup = Supervisor(cfg, pcfg, tcfg, n_workers=n_cp,
+                         tokens_per_worker=args.tokens_per_worker,
+                         dist=args.dist, fresh=args.fresh_stream,
+                         checkpoint_dir=args.checkpoint_dir)
+        summary = sup.run(args.steps)
+        s = sup.plan_cache.stats
+        print(f"plan cache: {s.hits} hits / {s.misses} misses "
+              f"(hit rate {s.hit_rate:.2f}), "
+              f"{sup.plan_cache.n_unique_specs} static specs, "
+              f"{summary['plan_ahead_hits']} plan-ahead builds consumed")
+        print(f"health: {len(summary['events'])} event(s), "
+              f"{len(summary['recoveries'])} recover(ies), "
+              f"{summary['compiles']} compiles")
+        print("done.")
+        return
 
     model = Model(cfg, tp=tp)
     loader = SyntheticLoader(
@@ -309,22 +681,9 @@ def main(argv=None):
                                   n_cp, args.tokens_per_worker, mask=mask)
         return key, build
 
-    def route_layers(fn_of_mask) -> object:
-        """One shared closure when the model is mask-uniform, else the
-        per-layer sequence the model unrolls over."""
-        if len(group_masks) == 1:
-            return fn_of_mask(group_masks[0])
-        if cfg.family not in ("dense", "moe", "audio", "vlm"):
-            raise ValueError(
-                f"per-layer attention-mask patterns are not supported for "
-                f"family {cfg.family!r} (shared/absent attention)")
-        by_mask = {m: fn_of_mask(m) for m in group_masks}
-        return tuple(by_mask[m] for m in layer_masks)
-
     step_cache: dict = {}
     mgr = None
     if args.checkpoint_dir:
-        from ..checkpoint import CheckpointManager
         mgr = CheckpointManager(args.checkpoint_dir)
 
     t0 = time.time()
@@ -350,10 +709,12 @@ def main(argv=None):
                 attn = None
             elif fcp:
                 attn = route_layers(
+                    cfg, layer_masks, group_masks,
                     lambda m: make_fcp_attn_fn(scheds[m], mesh, pcfg))
             else:
                 seg_j = jnp.asarray(b.seg_ids)
                 attn = route_layers(
+                    cfg, layer_masks, group_masks,
                     lambda m: dense_attn_fn(seg_j, batch["positions"],
                                             mask=m))
             ts = build_train_step(model, mesh, pcfg, tcfg, attn)
@@ -368,7 +729,7 @@ def main(argv=None):
             print(f"step {step:5d}  loss {float(loss):.4f}  "
                   f"gnorm {float(gnorm):.3f}  "
                   f"({time.time() - t0:.1f}s)", flush=True)
-        if mgr and (step + 1) % 10 == 0:
+        if mgr and (step + 1) % max(pcfg.checkpoint_every, 1) == 0:
             mgr.save(step, {"params": params, "opt": opt},
                      extra={"loader": loader.state.to_dict()},
                      blocking=False)

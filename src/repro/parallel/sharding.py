@@ -86,9 +86,32 @@ def param_specs(params, *, mode: str = "train", fsdp: bool = True,
         lambda p, x: _leaf_spec(p, x, fsdp_axis=fa, tp_axis=tp_axis), params)
 
 
+def _fit_spec(spec: P, leaf, mesh: Mesh) -> P:
+    """Drop sharded axes a leaf's dims can't divide.
+
+    Elastic survivor fleets have arbitrary sizes (4 -> 3 after a worker
+    loss): a parameter dim that doesn't divide the fsdp axis falls back
+    to replication *for that leaf only*, instead of making the whole
+    resize illegal."""
+    shape = getattr(leaf, "shape", ())
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if i < len(shape) and shape[i] % size == 0
+                   else None)
+    return P(*out)
+
+
 def param_shardings(params, mesh: Mesh, **kw):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s),
-                        param_specs(params, **kw))
+    return jax.tree.map(
+        lambda s, x: NamedSharding(mesh, _fit_spec(s, x, mesh)),
+        param_specs(params, **kw), params)
 
 
 def batch_spec(mesh: Mesh) -> P:

@@ -6,6 +6,7 @@ from . import compression, wire
 def __getattr__(name):
     # lazy: elastic imports core.schedule, which imports runtime.wire —
     # an eager import here would close that cycle during core's import
-    if name == "elastic":
-        return importlib.import_module(".elastic", __name__)
+    # (health rides on elastic, so it stays lazy for the same reason)
+    if name in ("elastic", "health"):
+        return importlib.import_module(f".{name}", __name__)
     raise AttributeError(name)

@@ -50,6 +50,54 @@ from .wire import coerce_wire
 _DEFAULT_COALESCE = ParallelConfig().coalesce
 
 
+def _resolve_knobs(coalesce, wire, in_dtype_bytes,
+                   pcfg: ParallelConfig | None):
+    """Uniform knob precedence shared by ``replan`` and ``replan_key``:
+    explicit argument wins, otherwise ``pcfg`` supplies it, otherwise
+    the repo default."""
+    if pcfg is not None:
+        if coalesce is None:
+            coalesce = pcfg.coalesce
+        if wire is None:
+            wire = pcfg.comm_dtype
+        if in_dtype_bytes is None:
+            in_dtype_bytes = pcfg.in_dtype_bytes
+    if coalesce is None:
+        coalesce = _DEFAULT_COALESCE
+    if in_dtype_bytes is None:
+        in_dtype_bytes = ParallelConfig().in_dtype_bytes
+    return coalesce, coerce_wire(wire), in_dtype_bytes
+
+
+def replan_tpw(seqlens: Sequence[int], new_n_workers: int,
+               block_size: int) -> int:
+    """The frame geometry ``replan`` derives: tokens_per_worker grows or
+    shrinks so ``new_n_workers`` frames still cover the global token
+    budget (rounded up to whole blocks)."""
+    total = int(sum(seqlens))
+    return -(-total // (new_n_workers * block_size)) * block_size
+
+
+def replan_key(seqlens: Sequence[int], new_n_workers: int,
+               block_size: int, *, mask=True, coalesce: int | None = None,
+               wire=None, in_dtype_bytes: float | None = None,
+               speeds=None, pcfg: ParallelConfig | None = None) -> tuple:
+    """The exact plan-cache key ``replan`` stores under.
+
+    Exposed so supervised drivers can *prefetch* survivor-set replans
+    (plan-ahead) and assert cache re-hits under the same keys ``replan``
+    will use when the fault actually lands — key-construction drift
+    between the two would silently turn every recovery into a cold
+    plan."""
+    mask = coerce_mask(mask)
+    coalesce, wire, in_dtype_bytes = _resolve_knobs(
+        coalesce, wire, in_dtype_bytes, pcfg)
+    tpw = replan_tpw(seqlens, new_n_workers, block_size)
+    return pc.plan_key(seqlens, new_n_workers, tpw, block_size,
+                       mask=mask, coalesce=coalesce, wire=wire,
+                       in_dtype_bytes=in_dtype_bytes, speeds=speeds)
+
+
 def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            *, n_q_heads: int, n_kv_heads: int, head_dim: int,
            mask=True, coalesce: int | None = None,
@@ -89,20 +137,9 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     the process default) to opt out.
     """
     mask = coerce_mask(mask)
-    if pcfg is not None:
-        if coalesce is None:
-            coalesce = pcfg.coalesce
-        if wire is None:
-            wire = pcfg.comm_dtype
-        if in_dtype_bytes is None:
-            in_dtype_bytes = pcfg.in_dtype_bytes
-    if coalesce is None:
-        coalesce = _DEFAULT_COALESCE
-    if in_dtype_bytes is None:
-        in_dtype_bytes = ParallelConfig().in_dtype_bytes
-    wire = coerce_wire(wire)
-    total = int(sum(seqlens))
-    tpw = -(-total // (new_n_workers * block_size)) * block_size
+    coalesce, wire, in_dtype_bytes = _resolve_knobs(
+        coalesce, wire, in_dtype_bytes, pcfg)
+    tpw = replan_tpw(seqlens, new_n_workers, block_size)
 
     def build() -> Schedule:
         return make_schedule(seqlens, new_n_workers, tpw, block_size,
@@ -157,7 +194,24 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
 # --------------------------------------------------------------------------
 
 class InjectedFailure(RuntimeError):
-    """Raised by tests to simulate a node preemption."""
+    """Raised by tests/drills to simulate a node preemption.
+
+    ``worker``/``step``/``round`` (all optional) identify the simulated
+    loss for supervised drivers: the failure strikes worker ``worker``
+    during step ``step`` at coalesced ppermute round ``round`` — i.e.
+    *mid-step*, so that step never commits and recovery must replan on
+    the survivors, restore the newest committed checkpoint, and replay
+    the data stream."""
+
+    def __init__(self, *args, worker: int | None = None,
+                 step: int | None = None, round: int | None = None):
+        if not args:
+            args = (f"injected failure (worker={worker}, step={step}, "
+                    f"round={round})",)
+        super().__init__(*args)
+        self.worker = worker
+        self.step = step
+        self.round = round
 
 
 @dataclasses.dataclass
@@ -168,10 +222,32 @@ class StragglerTracker:
 
     def observe(self, per_worker_step_time: np.ndarray) -> None:
         t = np.asarray(per_worker_step_time, dtype=np.float64)
+        if t.shape != (self.n_workers,):
+            raise ValueError(
+                f"observed {t.shape} step times for {self.n_workers} "
+                f"workers — call resize() after an elastic event")
         if self._times is None:
             self._times = t.copy()
         else:
             self._times = (1 - self.ewma) * self._times + self.ewma * t
+
+    def resize(self, survivor_ids: Sequence[int]) -> None:
+        """Remap EWMA state onto a new worker set.
+
+        Elastic shrink (every survivor id is a current worker): the
+        survivors keep their speed history under their *new* ids —
+        survivor order defines the renumbering, matching how the
+        supervised driver renumbers mesh slots.  Growth / replacement
+        (any id outside the current range): fresh workers have no
+        history, and a partial carry-over would misattribute speeds, so
+        the EWMA resets and re-converges."""
+        ids = [int(i) for i in survivor_ids]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate worker ids in {ids}")
+        shrink = (self._times is not None
+                  and all(0 <= i < self.n_workers for i in ids))
+        self._times = self._times[ids] if shrink else None
+        self.n_workers = len(ids)
 
     def speeds(self) -> np.ndarray:
         """Relative speeds normalized to max 1.0 (slow worker < 1)."""
@@ -213,15 +289,38 @@ def resumable_train(step_fn, init_state, *, manager: CheckpointManager,
     return state
 
 
-def reshape_frames(arr: np.ndarray, new_n_workers: int) -> np.ndarray:
+def reshape_frames(arr: np.ndarray, new_n_workers: int,
+                   tokens_per_worker: int | None = None, *,
+                   n_valid: int | None = None,
+                   fill=0) -> np.ndarray:
     """[F, T, ...] -> [F', T', ...] for the new worker count (same global
-    token stream, possibly padded)."""
+    token stream, possibly re-padded).
+
+    ``tokens_per_worker`` pins the new frame length (default: the
+    smallest that fits every old token).  ``n_valid`` marks how many
+    leading tokens of the flattened stream are real content — the rest
+    is padding the new geometry may *drop* (a shrunk budget from
+    ``replan_tpw`` is smaller than the old physical frames) and
+    re-grow with ``fill``.  ``fill`` matters per field: segment ids pad
+    with -1 (PAD_SEGMENT — zero would alias a real document), token /
+    loss-mask fields with 0."""
     f, t = arr.shape[:2]
     total = f * t
-    new_t = -(-total // new_n_workers)
-    pad = new_n_workers * new_t - total
-    flat = arr.reshape((total,) + arr.shape[2:])
+    if n_valid is None:
+        n_valid = total
+    if not 0 <= n_valid <= total:
+        raise ValueError(f"n_valid={n_valid} outside [0, {total}]")
+    if tokens_per_worker is None:
+        tokens_per_worker = -(-n_valid // new_n_workers)
+    new_total = new_n_workers * tokens_per_worker
+    if new_total < n_valid:
+        raise ValueError(
+            f"{new_n_workers}x{tokens_per_worker} frames hold {new_total} "
+            f"tokens < {n_valid} valid tokens")
+    flat = arr.reshape((total,) + arr.shape[2:])[:n_valid]
+    pad = new_total - n_valid
     if pad:
         flat = np.concatenate(
-            [flat, np.zeros((pad,) + flat.shape[1:], flat.dtype)])
-    return flat.reshape((new_n_workers, new_t) + arr.shape[2:])
+            [flat, np.full((pad,) + flat.shape[1:], fill, flat.dtype)])
+    return flat.reshape(
+        (new_n_workers, tokens_per_worker) + arr.shape[2:])

@@ -1,0 +1,248 @@
+"""Runtime health telemetry: measurement -> placement -> recovery.
+
+The missing loop around the speed-aware distributor.  The executor's
+host loop already produces a device-sync'd wall clock per step for free
+(it blocks on the loss anyway — :func:`repro.core.executor.timed_call`);
+this module turns those timings into *decisions*:
+
+* **straggler demotion** — per-worker step times feed the existing
+  :class:`~repro.runtime.elastic.StragglerTracker` EWMA; when a worker
+  stays below ``straggler_threshold`` relative speed for
+  ``health_window`` consecutive steps (hysteresis), the monitor latches
+  a *quantized* speed vector for ``elastic.replan(speeds=...)`` so the
+  slow worker is assigned proportionally fewer blocks.  Latching +
+  quantization + a ``demote_cooldown`` rate limit mean oscillating
+  measurements cannot thrash the plan cache: the planning speeds only
+  change on demote/promote events, never per step.
+* **failure detection** — heartbeats (refreshed by every observation)
+  with a ``step_timeout``; a silent worker raises :class:`WorkerLoss`,
+  which the supervised train loop (:mod:`repro.launch.train`) converts
+  into survivor-set replan + checkpoint restore + data-stream replay.
+
+Pure host-side numpy — nothing here runs under jit, so the healthy path
+costs nothing on device: no extra syncs, no recompiles (the latched
+speeds are ``None`` while healthy, producing plan-cache keys identical
+to a monitor-less run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..configs.base import ParallelConfig
+from .elastic import StragglerTracker
+
+
+class WorkerLoss(RuntimeError):
+    """A worker was declared dead (heartbeat timeout or injected)."""
+
+    def __init__(self, worker: int, step: int,
+                 reason: str = "heartbeat timeout"):
+        super().__init__(
+            f"worker {worker} lost at step {step} ({reason})")
+        self.worker = int(worker)
+        self.step = int(step)
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One demotion/promotion/failure decision, for logs and drills."""
+    kind: str                          # "demote" | "promote" | "fail"
+    step: int
+    workers: tuple[int, ...]           # affected worker ids
+    speeds: tuple[float, ...] | None = None   # latched planning speeds
+    detail: str = ""
+
+
+def per_worker_times(step_time: float, n_workers: int,
+                     skew: Sequence[float] | None = None) -> np.ndarray:
+    """Expand one wall-clock step time into per-worker observations.
+
+    Under SPMD jit every worker's step wall clock *is* the same number
+    (the slowest worker gates the collective), so the honest attribution
+    needs a skew source: a real deployment uses per-host monotonic
+    clocks around its local dispatch; the sim drills inject ``skew``
+    (relative per-worker slowdown factors) to model a degraded chip.
+    """
+    t = np.full(int(n_workers), float(step_time))
+    if skew is not None:
+        s = np.asarray(skew, dtype=np.float64)
+        if s.shape != (int(n_workers),):
+            raise ValueError(
+                f"skew has shape {s.shape}, expected ({n_workers},)")
+        t = t * s
+    return t
+
+
+class HealthMonitor:
+    """Closed-loop worker health: EWMA speeds, hysteresis, heartbeats.
+
+    The monitor never *acts* — it observes, decides, and exposes the
+    decision; the supervised train loop owns meshes and checkpoints.
+    Contract with the planner: :meth:`planning_speeds` is ``None``
+    whenever the fleet is healthy (same plan keys as a speedless run)
+    and only changes value on a logged demote/promote event.
+    """
+
+    def __init__(self, n_workers: int, *, window: int = 8,
+                 threshold: float = 0.8, step_timeout: float = 60.0,
+                 cooldown: int = 16, quantum: float = 0.05,
+                 ewma: float = 0.3,
+                 clock: Callable[[], float] = time.monotonic):
+        if not 0 < threshold <= 1:
+            raise ValueError(f"threshold {threshold} outside (0, 1]")
+        self.n_workers = int(n_workers)
+        self.window = max(int(window), 1)
+        self.threshold = float(threshold)
+        self.step_timeout = float(step_timeout)
+        self.cooldown = max(int(cooldown), 0)
+        self.quantum = float(quantum)
+        self._clock = clock
+        self.tracker = StragglerTracker(self.n_workers, ewma=ewma)
+        self._heartbeat = np.full(self.n_workers, clock(), np.float64)
+        self._slow_streak = 0
+        self._healthy_streak = 0
+        self._latched: tuple[float, ...] | None = None
+        self._last_event_step = -(1 << 30)
+        self.events: list[HealthEvent] = []
+
+    @classmethod
+    def from_pcfg(cls, n_workers: int, pcfg: ParallelConfig,
+                  clock: Callable[[], float] = time.monotonic
+                  ) -> "HealthMonitor":
+        return cls(n_workers, window=pcfg.health_window,
+                   threshold=pcfg.straggler_threshold,
+                   step_timeout=pcfg.step_timeout,
+                   cooldown=pcfg.demote_cooldown, clock=clock)
+
+    # -- telemetry in ------------------------------------------------------
+
+    def observe(self, step: int, per_worker_step_time,
+                alive: Sequence[int] | None = None) -> None:
+        """Record one step's per-worker wall-clock times.
+
+        Every reported worker's heartbeat refreshes (``alive`` narrows
+        that to a subset when a transport only heard from some).  The
+        straggler hysteresis streaks advance here — one observation per
+        step, so ``window`` is in *steps*."""
+        t = np.asarray(per_worker_step_time, dtype=np.float64)
+        if t.shape != (self.n_workers,):
+            raise ValueError(
+                f"observed {t.shape} times for {self.n_workers} workers")
+        self.tracker.observe(t)
+        now = self._clock()
+        if alive is None:
+            self._heartbeat[:] = now
+        else:
+            self._heartbeat[list(alive)] = now
+        if self.tracker.has_straggler(self.threshold):
+            self._slow_streak += 1
+            self._healthy_streak = 0
+        else:
+            self._slow_streak = 0
+            self._healthy_streak += 1
+
+    def heartbeat(self, worker: int, now: float | None = None) -> None:
+        """Out-of-band liveness signal (e.g. a ping between steps)."""
+        self._heartbeat[int(worker)] = (
+            self._clock() if now is None else now)
+
+    # -- failure detection -------------------------------------------------
+
+    def failed_workers(self, now: float | None = None) -> list[int]:
+        now = self._clock() if now is None else now
+        late = now - self._heartbeat > self.step_timeout
+        return [int(i) for i in np.nonzero(late)[0]]
+
+    def check(self, step: int, now: float | None = None) -> None:
+        """Raise :class:`WorkerLoss` if any heartbeat timed out."""
+        failed = self.failed_workers(now)
+        if failed:
+            self.events.append(HealthEvent(
+                "fail", int(step), tuple(failed),
+                detail=f"no heartbeat for > {self.step_timeout}s"))
+            raise WorkerLoss(failed[0], step)
+
+    def note_failure(self, step: int, worker: int,
+                     detail: str = "") -> None:
+        """Log an externally-detected loss (e.g. an InjectedFailure)."""
+        self.events.append(HealthEvent(
+            "fail", int(step), (int(worker),), detail=detail))
+
+    # -- closed-loop demotion ----------------------------------------------
+
+    def _quantize(self, speeds: np.ndarray) -> tuple[float, ...]:
+        """Snap measured speeds to the planning grid: healthy workers
+        (>= threshold) pin to exactly 1.0 so measurement noise among
+        them can't mint new plan keys; stragglers round to ``quantum``
+        steps (floored at one quantum — a zero speed would starve the
+        worker instead of demoting it)."""
+        out = []
+        for s in np.asarray(speeds, dtype=np.float64):
+            if s >= self.threshold:
+                out.append(1.0)
+            else:
+                q = round(float(s) / self.quantum) * self.quantum
+                out.append(round(max(q, self.quantum), 6))
+        return tuple(out)
+
+    def maybe_replan(self, step: int) -> HealthEvent | None:
+        """Hysteresis + rate limit: returns a demote/promote event when
+        the latched planning speeds should change, else ``None``.
+
+        Demote: the straggler streak filled the window and the quantized
+        speeds differ from the current latch.  Promote: a full window of
+        healthy observations while a latch is active.  Both respect
+        ``cooldown`` steps since the last event, so an oscillating
+        worker flips the plan at a bounded rate (and the plan cache
+        keeps both plans — flips re-hit, they don't rebuild)."""
+        if step - self._last_event_step < self.cooldown:
+            return None
+        if self._slow_streak >= self.window:
+            q = self._quantize(self.tracker.speeds())
+            if min(q) >= 1.0 or q == self._latched:
+                return None
+            self._latched = q
+            self._last_event_step = int(step)
+            slow = tuple(i for i, s in enumerate(q) if s < 1.0)
+            ev = HealthEvent("demote", int(step), slow, q,
+                             detail=f"slow for {self._slow_streak} steps")
+            self.events.append(ev)
+            return ev
+        if self._latched is not None and self._healthy_streak >= self.window:
+            ev = HealthEvent(
+                "promote", int(step),
+                tuple(i for i, s in enumerate(self._latched) if s < 1.0),
+                None, detail=f"healthy for {self._healthy_streak} steps")
+            self._latched = None
+            self._last_event_step = int(step)
+            self.events.append(ev)
+            return ev
+        return None
+
+    def planning_speeds(self) -> tuple[float, ...] | None:
+        """The latched speed vector for ``elastic.replan(speeds=...)``.
+
+        ``None`` while healthy — byte-identical plan-cache keys to a
+        run without a monitor, so the healthy path costs nothing."""
+        return self._latched
+
+    # -- elasticity --------------------------------------------------------
+
+    def resize(self, survivor_ids: Sequence[int]) -> None:
+        """Re-key all state onto the survivor set (see
+        ``StragglerTracker.resize``): streaks and the speed latch reset
+        — the new fleet must re-earn a demotion — and every survivor's
+        heartbeat restarts fresh."""
+        self.tracker.resize(survivor_ids)
+        self.n_workers = self.tracker.n_workers
+        self._heartbeat = np.full(self.n_workers, self._clock(),
+                                  np.float64)
+        self._slow_streak = 0
+        self._healthy_streak = 0
+        self._latched = None

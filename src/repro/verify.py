@@ -153,6 +153,81 @@ def fuzz(n_plans: int, seed: int, verbose: bool = False) -> int:
     return bad
 
 
+def fuzz_elastic(n_cases: int, seed: int, verbose: bool = False) -> int:
+    """Survivor-set replan sweep (the recovery path of
+    :mod:`repro.runtime.elastic` + :mod:`repro.launch.train`'s
+    supervised loop): for each random case, build the base plan through
+    a live cache, kill each worker id in turn and verify the replanned
+    schedule on the survivors, then regrow to the original fleet and
+    assert the cache re-hits the pre-shrink plan *object*.  Returns the
+    number of cases with violations (0 == clean run)."""
+    from .runtime import elastic
+
+    rng = np.random.default_rng(seed)
+    bad = 0
+    for i in range(n_cases):
+        case = _random_case(rng)
+        n = case["n_workers"]
+        nh, nkv = case["n_q_heads"], min(case["n_kv_heads"],
+                                         case["n_q_heads"])
+        hd = case["head_dim"]
+        cache = pc.PlanCache(max_size=64, verify=False)
+
+        def rp(nw, sp, _c=case, _cache=cache, _nh=nh, _nkv=nkv, _hd=hd):
+            return elastic.replan(
+                _c["seqlens"], nw, _c["block_size"], n_q_heads=_nh,
+                n_kv_heads=_nkv, head_dim=_hd, mask=_c["mask"],
+                coalesce=_c["coalesce"], wire=_c["wire"],
+                in_dtype_bytes=_c["in_dtype_bytes"], speeds=_sp(sp),
+                cache=_cache, verify=False)
+
+        def _sp(sp):
+            return None if sp is None else np.asarray(sp)
+
+        try:
+            base = rp(n, case["speeds"])
+        except Exception as e:
+            if isinstance(e, verifier.PlanVerificationError):
+                raise
+            if verbose:
+                print(f"[{i}] planner rejected ({e}): {_describe(case)}")
+            continue
+        violations: list = []
+        for k in range(n):
+            surv = (None if case["speeds"] is None else
+                    tuple(s for j, s in enumerate(case["speeds"])
+                          if j != k))
+            try:
+                sched = rp(n - 1, surv)
+            except Exception as e:
+                if isinstance(e, verifier.PlanVerificationError):
+                    raise
+                continue                    # planner refusal is fine
+            key = elastic.replan_key(
+                case["seqlens"], n - 1, case["block_size"],
+                mask=case["mask"], coalesce=case["coalesce"],
+                wire=case["wire"],
+                in_dtype_bytes=case["in_dtype_bytes"], speeds=surv)
+            violations += verifier.verify_schedule(
+                sched, n_q_heads=nh, n_kv_heads=nkv, head_dim=hd,
+                in_dtype_bytes=case["in_dtype_bytes"], key=key)
+        regrown = rp(n, case["speeds"])
+        if regrown is not base:
+            violations.append(
+                f"regrow to {n} workers missed the plan cache "
+                f"(pre-shrink plan was evicted or re-keyed)")
+        if violations:
+            bad += 1
+            print(f"[{i}] {len(violations)} violation(s): "
+                  f"{_describe(case)}", file=sys.stderr)
+            print(f"      seqlens={case['seqlens']}", file=sys.stderr)
+            for viol in violations[:10]:
+                print(f"      {viol}", file=sys.stderr)
+        elif verbose:
+            print(f"[{i}] ok ({n} kills + regrow): {_describe(case)}")
+    return bad
+
+
 def _parse_lens(text: str) -> list[int]:
     return [int(x) for x in text.replace(",", " ").split()]
 
@@ -163,6 +238,10 @@ def main(argv: Sequence[str] | None = None) -> int:
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--fuzz", action="store_true",
                     help="fuzz random plans instead of one explicit plan")
+    ap.add_argument("--fuzz-elastic", action="store_true",
+                    help="fuzz survivor-set replans: kill each worker"
+                         " in turn, verify the replanned schedule, and"
+                         " assert plan-cache re-hit on regrow")
     ap.add_argument("--plans", type=int, default=200,
                     help="number of fuzz plans (default 200)")
     ap.add_argument("--seed", type=int, default=0)
@@ -182,6 +261,16 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--kv-heads", type=int, default=8)
     ap.add_argument("--head-dim", type=int, default=128)
     args = ap.parse_args(argv)
+
+    if args.fuzz_elastic:
+        bad = fuzz_elastic(args.plans, args.seed, verbose=args.verbose)
+        if bad:
+            print(f"FAIL: {bad}/{args.plans} elastic cases violated "
+                  f"invariants", file=sys.stderr)
+            return 1
+        print(f"ok: {args.plans} survivor-set replan sweeps verified "
+              f"(seed {args.seed}), 0 violations")
+        return 0
 
     if args.fuzz:
         bad = fuzz(args.plans, args.seed, verbose=args.verbose)

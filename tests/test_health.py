@@ -1,0 +1,305 @@
+"""Runtime health telemetry: HealthMonitor hysteresis/heartbeats,
+StragglerTracker resizes, reshape_frames round-trips, and the
+deterministic-replay contract the supervised recovery path relies on."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.base import ParallelConfig
+from repro.data.loader import LoaderState, SyntheticLoader
+from repro.runtime import elastic
+from repro.runtime import health as H
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# StragglerTracker resize (elastic events)
+# --------------------------------------------------------------------------
+
+def test_tracker_resize_shrink_remaps_ewma():
+    tr = elastic.StragglerTracker(n_workers=4)
+    for _ in range(10):
+        tr.observe(np.array([1.0, 2.0, 1.0, 4.0]))
+    tr.resize([0, 2, 3])                    # worker 1 died
+    assert tr.n_workers == 3
+    s = tr.speeds()
+    # survivors keep history under their new ids: old worker 3 (4x
+    # slow) is now id 2, old workers 0/2 are the fast pair
+    assert s[0] == pytest.approx(1.0)
+    assert s[1] == pytest.approx(1.0)
+    assert s[2] == pytest.approx(0.25, abs=0.05)
+    tr.observe(np.ones(3))                  # new shape accepted
+
+
+def test_tracker_resize_growth_resets():
+    tr = elastic.StragglerTracker(n_workers=3)
+    for _ in range(5):
+        tr.observe(np.array([1.0, 1.0, 3.0]))
+    tr.resize([0, 1, 2, 3])                 # regrow: id 3 is fresh
+    assert tr.n_workers == 4
+    # partial history would misattribute speeds -> full reset
+    assert (tr.speeds() == 1.0).all()
+    assert not tr.has_straggler()
+
+
+def test_tracker_observe_shape_mismatch_raises():
+    tr = elastic.StragglerTracker(n_workers=4)
+    with pytest.raises(ValueError, match="resize"):
+        tr.observe(np.ones(3))
+    with pytest.raises(ValueError, match="duplicate"):
+        tr.resize([0, 0, 1])
+
+
+def test_distributor_rejects_misshaped_speeds():
+    from repro.core import distributor as dist
+    with pytest.raises(ValueError, match="speeds"):
+        dist.assign_blocks(np.ones(8), np.zeros(8), 4, mem_limit=1e18,
+                           speeds=np.ones(3))
+    # zero speeds clip instead of starving the worker to inf load
+    r = dist.assign_blocks(np.ones(8), np.zeros(8), 4, mem_limit=1e18,
+                           speeds=np.array([1.0, 1.0, 1.0, 0.0]))
+    assert np.bincount(r.owner, minlength=4)[3] <= 2
+
+
+# --------------------------------------------------------------------------
+# HealthMonitor: hysteresis, rate limiting, latching
+# --------------------------------------------------------------------------
+
+def _monitor(**kw):
+    kw.setdefault("window", 3)
+    kw.setdefault("cooldown", 4)
+    kw.setdefault("clock", FakeClock())
+    return H.HealthMonitor(4, **kw)
+
+
+def test_monitor_demotes_after_hysteresis_window_only():
+    m = _monitor()
+    times = H.per_worker_times(1.0, 4, [1.0, 1.0, 1.0, 2.0])
+    events = []
+    for step in range(6):
+        m.observe(step, times)
+        events.append(m.maybe_replan(step))
+    # steps 0-1: streak below window -> no event, speeds stay None
+    assert events[0] is None and events[1] is None
+    assert m.planning_speeds() is not None
+    demote = next(e for e in events if e is not None)
+    assert demote.kind == "demote" and demote.workers == (3,)
+    assert demote.step == 2                 # window filled at step 2
+    # latched speeds are quantized: healthy workers pinned to 1.0
+    assert m.planning_speeds() == (1.0, 1.0, 1.0, 0.5)
+    # later steps don't re-fire while the latch matches
+    assert all(e is None for e in events[3:])
+
+
+def test_monitor_latch_ignores_measurement_noise():
+    m = _monitor()
+    rng = np.random.default_rng(0)
+    for step in range(12):
+        noise = 1.0 + rng.uniform(-0.02, 0.02, size=4)
+        m.observe(step, H.per_worker_times(
+            1.0, 4, np.array([1.0, 1.0, 1.0, 2.0]) * noise))
+        m.maybe_replan(step)
+    demotes = [e for e in m.events if e.kind == "demote"]
+    # noisy measurements around the same 2x skew latch exactly once:
+    # quantization pins healthy workers to 1.0 and snaps the straggler
+    assert len(demotes) == 1
+    assert m.planning_speeds() == (1.0, 1.0, 1.0, 0.5)
+
+
+def test_monitor_cooldown_rate_limits_oscillation():
+    m = _monitor(window=1, cooldown=6)
+    slow = H.per_worker_times(1.0, 4, [1.0, 1.0, 1.0, 3.0])
+    slower = H.per_worker_times(1.0, 4, [1.0, 1.0, 1.0, 5.0])
+    n_events = 0
+    for step in range(12):
+        m.observe(step, slow if step % 2 == 0 else slower)
+        if m.maybe_replan(step) is not None:
+            n_events += 1
+    # oscillating speeds: without the cooldown every flip would mint a
+    # new plan key; with cooldown=6 at most ceil(12/6) events fire
+    assert n_events <= 2
+
+
+def test_monitor_promotes_back_after_healthy_window():
+    m = _monitor()
+    slow = H.per_worker_times(1.0, 4, [1.0, 1.0, 1.0, 2.0])
+    healthy = H.per_worker_times(1.0, 4)
+    step = 0
+    for _ in range(4):
+        m.observe(step, slow)
+        m.maybe_replan(step)
+        step += 1
+    assert m.planning_speeds() is not None
+    # EWMA must wash out AND the healthy streak must fill the window
+    for _ in range(30):
+        m.observe(step, healthy)
+        m.maybe_replan(step)
+        step += 1
+    assert m.planning_speeds() is None      # promoted: healthy keys again
+    kinds = [e.kind for e in m.events]
+    # exactly one promote; the EWMA wash-out may re-latch a softer
+    # demotion on the way up (rate-limited), never more than a couple
+    assert kinds.count("promote") == 1
+    assert 1 <= kinds.count("demote") <= 2
+    assert kinds[-1] == "promote"           # ends healthy, no flapping
+
+
+def test_monitor_heartbeat_timeout_raises_worker_loss():
+    clock = FakeClock()
+    m = H.HealthMonitor(4, step_timeout=10.0, clock=clock)
+    m.observe(0, np.ones(4))
+    m.check(0)                              # fresh heartbeats: fine
+    clock.t = 5.0
+    m.heartbeat(0), m.heartbeat(1), m.heartbeat(3)
+    clock.t = 14.0                          # worker 2 silent for 14s
+    with pytest.raises(H.WorkerLoss) as ei:
+        m.check(7)
+    assert ei.value.worker == 2 and ei.value.step == 7
+    assert m.events[-1].kind == "fail" and m.events[-1].workers == (2,)
+
+
+def test_monitor_resize_resets_latch_and_streaks():
+    m = _monitor()
+    for step in range(4):
+        m.observe(step, H.per_worker_times(1.0, 4, [1, 1, 1, 2.0]))
+        m.maybe_replan(step)
+    assert m.planning_speeds() is not None
+    m.resize([0, 1, 2])
+    assert m.n_workers == 3
+    assert m.planning_speeds() is None      # new fleet re-earns demotion
+    m.observe(4, np.ones(3))                # new shape accepted
+    assert m.failed_workers() == []
+
+
+def test_monitor_from_pcfg_carries_knobs():
+    pcfg = ParallelConfig(health_window=5, straggler_threshold=0.7,
+                          step_timeout=12.0, demote_cooldown=9)
+    m = H.HealthMonitor.from_pcfg(4, pcfg)
+    assert (m.window, m.threshold, m.step_timeout, m.cooldown) == \
+        (5, 0.7, 12.0, 9)
+
+
+def test_per_worker_times_validates_skew():
+    with pytest.raises(ValueError):
+        H.per_worker_times(1.0, 4, [1.0, 2.0])
+
+
+# --------------------------------------------------------------------------
+# reshape_frames: grow -> shrink -> grow preserves the global stream
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_reshape_frames_roundtrip_preserves_stream(n_a, n_b, seed):
+    rng = np.random.default_rng(seed)
+    f0, t0 = 4, 96
+    arr = rng.integers(0, 1000, size=(f0, t0)).astype(np.int32)
+    n_valid = int(rng.integers(1, f0 * t0 + 1))
+    flat0 = arr.reshape(-1)[:n_valid]
+    tpw = -(-n_valid // n_a)
+    a = elastic.reshape_frames(arr, n_a, tpw, n_valid=n_valid, fill=-1)
+    assert a.shape == (n_a, tpw)
+    # shrink/grow again from the reshaped view (its padding is valid
+    # from the new geometry's perspective; only [:n_valid] is content)
+    tpw_b = -(-n_valid // n_b)
+    b = elastic.reshape_frames(a, n_b, tpw_b, n_valid=n_valid, fill=-1)
+    back = elastic.reshape_frames(b, n_a, tpw, n_valid=n_valid, fill=-1)
+    np.testing.assert_array_equal(back, a)
+    np.testing.assert_array_equal(b.reshape(-1)[:n_valid], flat0)
+    assert (b.reshape(-1)[n_valid:] == -1).all()
+
+
+def test_reshape_frames_rejects_lossy_truncation():
+    arr = np.arange(12).reshape(2, 6)
+    with pytest.raises(ValueError, match="valid tokens"):
+        elastic.reshape_frames(arr, 2, 2, n_valid=10)
+    # legacy call shape (no tpw, no n_valid) still zero-pads
+    out = elastic.reshape_frames(arr, 5)
+    assert out.shape == (5, 3)
+    assert out.reshape(-1)[:12].tolist() == list(range(12))
+    assert (out.reshape(-1)[12:] == 0).all()
+
+
+# --------------------------------------------------------------------------
+# deterministic replay: restore-and-replay == uninterrupted stream
+# --------------------------------------------------------------------------
+
+def _loader(**kw):
+    kw.setdefault("dist", "real_world")
+    kw.setdefault("n_frames", 4)
+    kw.setdefault("tokens_per_worker", 512)
+    kw.setdefault("vocab_size", 128)
+    kw.setdefault("seed", 3)
+    return SyntheticLoader(**kw)
+
+
+def test_restored_loader_replays_bit_identical_batches():
+    a = _loader()
+    batches = [a.next() for _ in range(8)]
+    saved = a.state.to_dict()               # checkpoint extra at step 8
+    tail = [a.next() for _ in range(4)]
+    # "crash": a fresh loader restores the state and replays
+    b = _loader()
+    b.state = LoaderState.from_dict(saved)
+    for want in tail:
+        got = b.next()
+        np.testing.assert_array_equal(got.tokens, want.tokens)
+        np.testing.assert_array_equal(got.labels, want.labels)
+        np.testing.assert_array_equal(got.seg_ids, want.seg_ids)
+        np.testing.assert_array_equal(got.loss_mask, want.loss_mask)
+        assert got.seqlens == want.seqlens
+    # and replay from 0 reproduces the whole prefix (pure in seed/step)
+    c = _loader()
+    for want in batches:
+        np.testing.assert_array_equal(c.next().tokens, want.tokens)
+
+
+def test_fleet_view_of_pinned_stream_is_resize_invariant():
+    """The supervised loop's survivor view (reshape_frames of the
+    pinned-geometry batch) carries the same real tokens as the original
+    frames — padding is re-derived, content is not."""
+    a = _loader()
+    b = a.next()
+    n_valid = int(sum(b.seqlens))
+    tpw3 = elastic.replan_tpw(b.seqlens, 3, 128)
+    v = elastic.reshape_frames(b.tokens, 3, tpw3, n_valid=n_valid)
+    np.testing.assert_array_equal(
+        v.reshape(-1)[:n_valid], b.tokens.reshape(-1)[:n_valid])
+    seg = elastic.reshape_frames(b.seg_ids, 3, tpw3, n_valid=n_valid,
+                                 fill=-1)
+    assert (seg.reshape(-1)[n_valid:] == -1).all()
+
+
+# --------------------------------------------------------------------------
+# checkpoint hygiene + elastic fuzz smoke
+# --------------------------------------------------------------------------
+
+def test_manager_sweeps_stale_tmp_and_uncommitted(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(tmp_path, keep_n=3)
+    mgr.save(4, {"x": np.arange(3)}, blocking=True)
+    # simulate a crash mid-save: orphan tmp + renamed-but-uncommitted
+    (tmp_path / "step_9.tmp").mkdir()
+    (tmp_path / "step_7").mkdir()
+    mgr2 = CheckpointManager(tmp_path, keep_n=3)
+    assert mgr2.steps() == [4]
+    assert not (tmp_path / "step_9.tmp").exists()
+    assert not (tmp_path / "step_7").exists()
+    assert (tmp_path / "step_4").exists()   # committed survives
+
+
+def test_fuzz_elastic_smoke():
+    from repro.verify import fuzz_elastic
+    assert fuzz_elastic(5, seed=123) == 0

@@ -64,6 +64,17 @@ def test_wire_executor_multidevice():
     assert "ALL WIRE EXECUTOR CASES PASSED" in out
 
 
+@pytest.mark.slow
+def test_fault_drill_multidevice():
+    # fault-tolerance drill: mid-step worker loss -> survivor replan +
+    # checkpoint restore + deterministic replay (post-recovery
+    # loss/gnorm <= 1e-6 vs an uninterrupted survivor run), and a
+    # 2x-slow worker demoted by the closed health loop within the
+    # hysteresis window with plan-cache discipline intact
+    out = _run("run_fault_drill.py", timeout=1800)
+    assert "ALL FAULT DRILL CASES PASSED" in out
+
+
 def test_cp_decode_multidevice():
     out = _run("run_decode.py")
     assert "ALL MULTIDEVICE DECODE CASES PASSED" in out
