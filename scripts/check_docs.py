@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Docs cross-reference gate: backtick references must resolve.
+
+Extracts inline backtick spans from ``docs/*.md`` and ``README.md`` and
+fails when a reference no longer resolves against the tree:
+
+* **CLI flags** (``--foo``, including ``--no-foo`` negations) must
+  appear as an ``add_argument`` option string somewhere under
+  ``src/repro``, ``benchmarks`` or ``scripts`` — a renamed or removed
+  flag rots every doc that quotes it;
+* **file paths** (spans containing ``/`` with a known suffix, e.g.
+  ``core/executor.py``, ``docs/overlap.md``, ``scripts/ci.sh``) must
+  exist at the repo root, under ``src/`` or under ``src/repro/``;
+* **dotted module refs** (``repro.launch.train``,
+  ``benchmarks.bench_executor``) must resolve to a module file or
+  package, with trailing class/function components stripped
+  progressively (``repro.masks.MaskSpec`` resolves via
+  ``repro/masks.py``);
+* **path.attr hybrids** (``runtime/elastic.replan``) resolve their
+  path prefix the same way.
+
+Fenced code blocks are skipped (shell transcripts legitimately mention
+generated files like ``bench_out/``).  Anything that matches none of
+the reference shapes is ignored — this is a link checker, not a
+prose linter.
+
+Usage::
+
+    python scripts/check_docs.py            # from the repo root
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+
+FLAG_SOURCES = ("src/repro", "benchmarks", "scripts")
+PATH_SUFFIXES = (".py", ".md", ".json", ".sh", ".yml", ".toml")
+# roots a doc-quoted path may be relative to, tried in order
+PATH_ROOTS = ("", "src", "src/repro", "tests")
+
+_FENCE = re.compile(r"^```.*?^```", re.M | re.S)
+_SPAN = re.compile(r"`([^`\n]+)`")
+_FLAG = re.compile(r"--[A-Za-z0-9][A-Za-z0-9-]*")
+_ADD_ARG = re.compile(r"add_argument\(\s*[\"'](--[A-Za-z0-9-]+)[\"']")
+_DOTTED = re.compile(r"^(repro|benchmarks|scripts)(\.[A-Za-z_]\w*)+$")
+
+
+def known_flags() -> set[str]:
+    flags: set[str] = set()
+    for src in FLAG_SOURCES:
+        for f in (ROOT / src).rglob("*.py"):
+            flags |= set(_ADD_ARG.findall(f.read_text()))
+    # BooleanOptionalAction mints a --no-X for every --X; accept both
+    flags |= {f"--no-{f[2:]}" for f in tuple(flags)}
+    return flags
+
+
+def path_exists(rel: str) -> bool:
+    return any((ROOT / r / rel).exists() for r in PATH_ROOTS)
+
+
+def resolve_dotted(span: str) -> bool:
+    """``repro.a.b.C`` -> try a/b/C.py, then a/b.py, ... (trailing
+    components may be classes/functions, not modules)."""
+    parts = span.split(".")
+    # never strip down to the bare package root — `repro.nope.x` must
+    # not resolve just because `src/repro/` exists
+    for cut in range(len(parts), 1, -1):
+        rel = "/".join(parts[:cut])
+        if path_exists(rel + ".py") or path_exists(rel):
+            return True
+    return False
+
+
+def check_span(span: str, flags: set[str]) -> list[str]:
+    errors = []
+    for flag in _FLAG.findall(span):
+        if flag not in flags:
+            errors.append(f"unknown CLI flag {flag}")
+    if errors or span.startswith("--"):
+        return errors
+    token = span.strip().rstrip(":,")
+    if _DOTTED.match(token):
+        if not resolve_dotted(token):
+            errors.append(f"dotted ref {token} does not resolve")
+    elif "/" in token and " " not in token:
+        if token.endswith(PATH_SUFFIXES):
+            if not path_exists(token):
+                errors.append(f"path {token} does not exist")
+        elif re.match(r"^[\w./-]+$", token):
+            # path.attr hybrid (runtime/elastic.replan) or bare dir
+            base = token.split("::")[0]
+            head = base.split(".")[0]
+            if not (path_exists(head + ".py") or path_exists(head)
+                    or path_exists(base)):
+                errors.append(f"path ref {token} does not resolve")
+    return errors
+
+
+def main() -> int:
+    flags = known_flags()
+    failures = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            failures.append(f"{doc.relative_to(ROOT)}: file missing")
+            continue
+        # blank out fenced blocks (preserving line numbers)
+        text = _FENCE.sub(lambda m: "\n" * m.group(0).count("\n"),
+                          doc.read_text())
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            for span in _SPAN.findall(line):
+                for err in check_span(span, flags):
+                    failures.append(
+                        f"{doc.relative_to(ROOT)}:{lineno}: {err}")
+    if failures:
+        print("DOCS CROSS-REFERENCE CHECK FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"docs cross-reference check passed "
+          f"({len(DOC_FILES)} file(s), {len(flags)} known flags)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,9 @@ run_lint() {
         echo "mypy not installed; skipping type check" \
              "(CI runs it: python -m pip install mypy)" >&2
     fi
+    # docs link check: backtick-quoted module paths / CLI flags in
+    # docs/*.md + README must resolve against the tree
+    python scripts/check_docs.py
 }
 
 run_verify() {

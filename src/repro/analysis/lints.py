@@ -75,6 +75,10 @@ KNOB_PROBES: dict[str, list[tuple[str, dict, dict]]] = {
     "coalesce": [
         ("coalescer degree", {"coalesce": 1}, {"coalesce": 2}),
     ],
+    "overlap": [
+        ("double-buffered-rounds parity bit",
+         {"overlap": False}, {"overlap": True}),
+    ],
 }
 
 # key-only knobs (not StaticSpec fields) that still must differ-key —
@@ -113,7 +117,7 @@ def check_spec_key_coverage(
     def key(**kw) -> tuple:
         base = dict(mask=True, coalesce=1, locality="auto", alpha=1.0,
                     beta=1.0, speeds=None, wire="f32",
-                    in_dtype_bytes=4.0, extra=())
+                    in_dtype_bytes=4.0, overlap=False, extra=())
         base.update(kw)
         return pc.plan_key([64, 32], 2, 64, 32, **base)
 

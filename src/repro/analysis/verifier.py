@@ -21,16 +21,23 @@ are what the mutation-kill suite asserts on):
   the step table reads (the executor commits round ``r`` *after* run
   ``r``'s compute, so consumers sit in runs ``> r``).
 * ``recv-slot-liveness`` -- no arrival commit overwrites a receive slot
-  whose current occupant still has pending consumers.
+  whose current occupant still has pending consumers.  Under the
+  overlap pipeline (``StaticSpec.overlap``) the rule tightens by one
+  run: round ``r``'s send is issued before run ``r``'s compute, so its
+  commit may land while run ``r`` still reads the buffer — an occupant
+  last used in run ``r`` counts as live (the buffer-parity allocation
+  in ``planner.allocate_recv_slots`` exists to satisfy exactly this).
 * ``round-validity`` -- each coalesced round is structurally valid:
   every group's pair set is a partial permutation, per-worker real
   sends/receives are bounded by the round's sub-matching window, the
   group count respects the identity fallback, each remote block is
   delivered at most once per worker and only where it has a consumer,
   and group padding stays under the bytes-aware wire pad cap.
-* ``table-well-formedness`` -- forward runs are q-slot-sorted, backward
-  runs are kv-sorted permutations of the same steps, trash conventions
-  hold, ``sched_blk`` is a bijection consistent with the assignment, the
+* ``table-well-formedness`` -- forward runs are (q-slot, kv-block)
+  sorted, backward runs are (kv-block, q-slot) sorted permutations of
+  the same steps (block-keyed so the merge order is identical under
+  serial and overlap slot allocations), trash conventions hold,
+  ``sched_blk`` is a bijection consistent with the assignment, the
   reshuffle tables reach the schedule layout exactly and the restore
   tables return every output block to its user slot.
 * ``byte-accounting`` -- ``cost_model.spec_wire_bytes`` equals the wire
@@ -189,7 +196,8 @@ def check_schedule(sched: Schedule, *, n_q_heads: int = 8,
 # lint in analysis/lints.py keeps this aligned with the key builder
 _KEY_SEQLENS, _KEY_WORKERS, _KEY_TPW, _KEY_BLOCK = 0, 1, 2, 3
 _KEY_MASK, _KEY_WIRE, _KEY_COALESCE = 4, 5, 6
-_KEY_LEN = 12
+_KEY_OVERLAP = 12
+_KEY_LEN = 13
 
 
 def plan_key_shaped(key: object) -> bool:
@@ -231,6 +239,8 @@ def verify_plan_key(key: tuple, sched: Schedule,
         bad("wire", wire_key, key[_KEY_WIRE])
     if key[_KEY_COALESCE] != spec.coalesce:
         bad("coalesce", spec.coalesce, key[_KEY_COALESCE])
+    if bool(key[_KEY_OVERLAP]) != spec.overlap:
+        bad("overlap", spec.overlap, key[_KEY_OVERLAP])
     batch_lens = tuple(int(x) for x in sched.batch.seqlens)
     if tuple(key[_KEY_SEQLENS]) != batch_lens:
         bad("seqlens", batch_lens, tuple(key[_KEY_SEQLENS]))
@@ -350,8 +360,9 @@ def _check_layout(sched: Schedule, v: list[Violation]) -> None:
 
 
 def _check_steps(sched: Schedule, v: list[Violation]) -> None:
-    """Step-table conventions: fwd runs q-slot-sorted, bwd runs
-    kv-sorted, bwd a permutation of fwd per run, trash steps whole."""
+    """Step-table conventions: fwd runs (q-slot, kv-block) sorted, bwd
+    runs (kv-block, q-slot) sorted, bwd a permutation of fwd per run,
+    trash steps whole."""
     spec, a = sched.spec, sched.arrays
     q_trash, kv_trash = spec.q_trash, spec.kv_trash
     nb = sched.batch.n_blocks
@@ -369,17 +380,23 @@ def _check_steps(sched: Schedule, v: list[Violation]) -> None:
                         "table-well-formedness",
                         f"half-trash step (q={qs}, kv={kv}, blk={blk})",
                         table="step_q", worker=w, round=r, row=lo + i))
-            if any(fwd[i][:2] > fwd[i + 1][:2]
+            # canonical orders key on BLOCK ids, not buffer slot
+            # indices: slot numbering depends on the receive-slot
+            # allocation (serial vs overlap parity), and a
+            # slot-keyed merge order would make the two modes
+            # accumulate partials differently — breaking the bitwise
+            # overlap-transparency contract (docs/overlap.md)
+            if any((fwd[i][0], fwd[i][2]) > (fwd[i + 1][0], fwd[i + 1][2])
                    for i in range(len(fwd) - 1)):
                 v.append(Violation(
                     "table-well-formedness",
-                    "forward run is not (q-slot, kv) sorted",
+                    "forward run is not (q-slot, kv-block) sorted",
                     table="step_q", worker=w, round=r))
-            if any((bwd[i][1], bwd[i][0]) > (bwd[i + 1][1], bwd[i + 1][0])
+            if any((bwd[i][2], bwd[i][0]) > (bwd[i + 1][2], bwd[i + 1][0])
                    for i in range(len(bwd) - 1)):
                 v.append(Violation(
                     "table-well-formedness",
-                    "backward run is not (kv, q-slot) sorted",
+                    "backward run is not (kv-block, q-slot) sorted",
                     table="bwd_kv", worker=w, round=r))
             if sorted(fwd) != sorted(bwd):
                 v.append(Violation(
@@ -542,12 +559,21 @@ def _simulate_rounds(sched: Schedule, v: list[Violation]) -> None:
                         continue
                     e = dd - slots
                     occ = buffers[d][e]
-                    if occ >= 0 and last_use.get((d, occ), -1) > rr:
+                    # serial loop: run rr finishes before round rr
+                    # commits, so an occupant last used in run rr is
+                    # dead.  overlap (double-buffered) loop: round rr's
+                    # send was issued BEFORE run rr's compute, so its
+                    # commit may land while run rr still reads the
+                    # buffer — an occupant last used in run rr is live.
+                    bound = rr - 1 if spec.overlap else rr
+                    if occ >= 0 and last_use.get((d, occ), -1) > bound:
                         v.append(Violation(
                             "recv-slot-liveness",
                             f"commit of round {rr} overwrites recv slot "
                             f"{e} while block {occ} (last used in run "
-                            f"{last_use[(d, occ)]}) is still live",
+                            f"{last_use[(d, occ)]}) is still live"
+                            + (" under the overlap pipeline"
+                               if spec.overlap else ""),
                             table="recv_slot", worker=d, round=rr,
                             row=row))
                     if blk >= 0:

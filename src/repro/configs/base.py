@@ -188,6 +188,18 @@ class ParallelConfig:
     step_timeout: float = 60.0
     demote_cooldown: int = 16
     checkpoint_every: int = 10
+    # software-pipelined executor rounds (docs/overlap.md): issue round
+    # r+1's sends before run r's compute and double-buffer the receive
+    # slots.  Folded into StaticSpec and every plan-cache key (parity
+    # bit), and preserved across elastic replans like the other
+    # schedule knobs.
+    overlap: bool = False
+    # layer-pipelined reshuffle: keep the hidden state resident in the
+    # schedule layout across each run of same-mask layers, moving it
+    # once per layer-group boundary (executor.fcp_reshuffle) instead of
+    # reshuffling Q/K/V and restoring O in every layer.  Model-level
+    # transform only — schedules and plan keys are unchanged.
+    layer_pipeline: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

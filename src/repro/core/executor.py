@@ -5,12 +5,22 @@ Runs a host-built :class:`~repro.core.schedule.Schedule` inside
 
 * **transparent reshuffle** — ppermute matchings move (q, k, v) blocks
   from the user/stream layout to the schedule layout (and ``o`` back);
-* **block-level pipelined rounds** — per coalesced round ``r`` the kernel
-  issues the round's ``lax.ppermute`` group(s) (each group a partial
-  permutation == congestion-free, Lemma 1, shipping a stack of up to ``C``
-  KV blocks — the §4.2 bottom-up coalescer) *before* the compute step that
-  consumes the previous arrival, so XLA's async collective scheduler
-  overlaps them (the paper's multi-buffer pipeline, §5);
+* **software-pipelined rounds** — the round loop has two modes.  Serial
+  (``spec.overlap`` off): per coalesced round ``r`` the kernel issues the
+  round's ``lax.ppermute`` group(s) (each group a partial permutation ==
+  congestion-free, Lemma 1, shipping a stack of up to ``C`` KV blocks —
+  the §4.2 bottom-up coalescer), computes run ``r``, then commits the
+  arrivals.  Overlap (``spec.overlap`` on — the double-buffered pipeline,
+  paper §5): round ``r+1``'s sends are issued *before* run ``r``'s
+  compute, gathered from an **immutable snapshot of the local KV slots**
+  (sends only ever read local slots or the zero trash row, never the
+  receive region commits scatter into) — severing the false dataflow
+  edge ``ship(r+1) ← commit(r)`` that serializes the serial loop — and
+  arrivals land in **double-buffered receive slots** (the buffer-parity
+  allocation of ``planner.allocate_recv_slots``: consecutive rounds
+  commit into disjoint slot halves), so a commit never waits on an
+  in-flight send and XLA's async collective scheduler hides the wire
+  behind the fused kernel (``docs/overlap.md`` has the timeline);
 * **compute runs** — the schedule groups the steps between two arrival
   commits into a *run*.  The fused impls (``fused`` / ``fused_xla``)
   issue ONE attention launch per run (``kernels.ops.fused_run_attention``:
@@ -29,6 +39,13 @@ Runs a host-built :class:`~repro.core.schedule.Schedule` inside
 Everything is differentiable: the backward pass reverses the permutations
 automatically (ppermute transpose) — FCP's backward is the same schedule
 run in reverse, as in the paper.
+
+For the layer-pipelined reshuffle (``docs/overlap.md``),
+``fcp_attention(..., layout="sched")`` consumes q/k/v already resident
+in the schedule layout and returns o in the schedule layout — skipping
+the per-layer Q/K/V reshuffle and O restore entirely — while
+``fcp_reshuffle`` moves the *hidden state* (any per-token tensor)
+between layouts once per layer group instead of once per layer.
 
 Also provides ``cp_decode_attention``: context-parallel decode where the
 KV cache is sharded along sequence and partials merge with a psum-flash
@@ -101,11 +118,17 @@ def _set_row(buf: jax.Array, row: jax.Array, i: jax.Array) -> jax.Array:
 
 
 def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
-               cfg: ExecConfig):
+               cfg: ExecConfig, layout: str = "stream"):
     """Per-device executor body.
 
     q: [1, tpw, hq, d]; k/v: [1, tpw, kh, d]; ``t``: local plan tables
     (leading dim 1).  Returns o: [1, tpw, hq, d] f32.
+
+    ``layout="stream"`` (default) reshuffles q/k/v from the user layout
+    into the schedule layout and restores o; ``layout="sched"`` takes
+    q/k/v already in the schedule layout and returns o in the schedule
+    layout (the layer-pipelined path: the caller moved the hidden state
+    once per layer group via :func:`fcp_reshuffle`).
     """
     bs, slots, ext = spec.block_size, spec.slots, spec.ext_slots
     tpw = slots * bs
@@ -134,29 +157,36 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
     def with_trash(x):
         return jnp.concatenate([x, jnp.zeros_like(x[:1])], axis=0)
 
-    qs = with_trash(_gather_rows(q_u, t["resh_local_src"]))
-    ks = with_trash(_gather_rows(k_u, t["resh_local_src"]))
-    vs = with_trash(_gather_rows(v_u, t["resh_local_src"]))
-    # senders gather through a trash row: idle lanes ship zeros
-    q_ut, k_ut, v_ut = with_trash(q_u), with_trash(k_u), with_trash(v_u)
-    for r in range(spec.n_resh_rounds):
-        snd = t["resh_send_slot"][r]                 # [S2] payload rows
-        dst = t["resh_dst_slot"][r]
-        off = 0
-        for g in spec.resh_rounds[r].groups:
-            # rows the worker does not participate in gather/write trash
-            idx = snd[off:off + g.rows]
-            payload = jnp.concatenate([
-                _gather_rows(q_ut, idx),
-                _gather_rows(k_ut, idx),
-                _gather_rows(v_ut, idx)], axis=1)   # [rows, hq+2kh, ...]
-            recv = ship(payload, g.perm)
-            # one scatter per group (idle rows all land on the trash row)
-            didx = dst[off:off + g.rows]
-            qs = qs.at[didx].set(recv[:, :hq])
-            ks = ks.at[didx].set(recv[:, hq:hq + kh])
-            vs = vs.at[didx].set(recv[:, hq + kh:])
-            off += g.rows
+    if layout == "sched":
+        # layer-pipelined path: inputs are already schedule-resident
+        # (the hidden state moved at the layer-group boundary), so the
+        # per-layer Q/K/V reshuffle vanishes
+        qs, ks, vs = with_trash(q_u), with_trash(k_u), with_trash(v_u)
+    else:
+        qs = with_trash(_gather_rows(q_u, t["resh_local_src"]))
+        ks = with_trash(_gather_rows(k_u, t["resh_local_src"]))
+        vs = with_trash(_gather_rows(v_u, t["resh_local_src"]))
+        # senders gather through a trash row: idle lanes ship zeros
+        q_ut, k_ut, v_ut = (with_trash(q_u), with_trash(k_u),
+                            with_trash(v_u))
+        for r in range(spec.n_resh_rounds):
+            snd = t["resh_send_slot"][r]             # [S2] payload rows
+            dst = t["resh_dst_slot"][r]
+            off = 0
+            for g in spec.resh_rounds[r].groups:
+                # rows the worker doesn't participate in gather/write trash
+                idx = snd[off:off + g.rows]
+                payload = jnp.concatenate([
+                    _gather_rows(q_ut, idx),
+                    _gather_rows(k_ut, idx),
+                    _gather_rows(v_ut, idx)], axis=1)  # [rows, hq+2kh, ...]
+                recv = ship(payload, g.perm)
+                # one scatter per group (idle rows land on the trash row)
+                didx = dst[off:off + g.rows]
+                qs = qs.at[didx].set(recv[:, :hq])
+                ks = ks.at[didx].set(recv[:, hq:hq + kh])
+                vs = vs.at[didx].set(recv[:, hq + kh:])
+                off += g.rows
 
     # ---- extended KV buffer (local slots + colored receive slots + trash) -
     zpad = jnp.zeros((ext + 1, kh, bs, d), ks.dtype)
@@ -178,24 +208,55 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
             k_seg_b = jnp.take(t["blk_seg"], t["bwd_kv_blk"], axis=0)
             k_pos_b = jnp.take(t["blk_pos"], t["bwd_kv_blk"], axis=0)
 
-    # run r computes between the ppermute issue and the arrival commit of
-    # round r: consumers of round r's blocks sit in runs > r (§4.2), and
-    # XLA overlaps the in-flight collective with run r's compute.
-    for r in range(spec.n_runs):
-        arrivals = []               # [(row offset, group, payload), ...]
-        if r < spec.n_rounds:
-            # issue this round's ppermute group(s) first — independent of
-            # the compute below, so XLA overlaps them (block pipeline).
-            # Each group ships a stack of up to C KV blocks (coalescer).
-            snd = t["send_slot"][r]                     # [S] payload rows
-            off = 0
-            for g in spec.comm_rounds[r].groups:
-                idx = snd[off:off + g.rows]
+    if spec.overlap and spec.n_rounds:
+        # immutable send sources: send rows only ever name LOCAL slots
+        # (< slots) or the trash row — never the receive region that
+        # commits scatter into — so payloads gathered from this frozen
+        # snapshot are bitwise-identical to gathering from kxt/vxt,
+        # while severing the false dataflow edge ship(r+1) <- commit(r)
+        # that forces the serial loop to take turns with the wire
+        ksrc = jnp.concatenate([ks[:slots], zpad[:1]], axis=0)
+        vsrc = jnp.concatenate([vs[:slots], zpad[:1]], axis=0)
+
+    def issue(r):
+        # one ppermute per group; each ships a stack of up to C KV
+        # blocks (the §4.2 coalescer).  Returns [(row offset, group,
+        # shipped payload), ...] for the commit of round r.
+        snd = t["send_slot"][r]                     # [S] payload rows
+        out = []
+        off = 0
+        for g in spec.comm_rounds[r].groups:
+            idx = snd[off:off + g.rows]
+            if spec.overlap:
+                # remap the trash index (slots + ext) onto the frozen
+                # zero row; -1 padding stays -1 (zeros via _gather_rows)
+                idx = jnp.minimum(idx, slots)
+                payload = jnp.concatenate(
+                    [_gather_rows(ksrc, idx), _gather_rows(vsrc, idx)],
+                    axis=1)                         # [rows, 2kh, bs, d]
+            else:
                 payload = jnp.concatenate(
                     [_gather_rows(kxt, idx), _gather_rows(vxt, idx)],
-                    axis=1)                         # [rows, 2kh, bs, d]
-                arrivals.append((off, g, ship(payload, g.perm)))
-                off += g.rows
+                    axis=1)
+            out.append((off, g, ship(payload, g.perm)))
+            off += g.rows
+        return out
+
+    # run r computes between the ppermute issue and the arrival commit
+    # of round r: consumers of round r's blocks sit in runs > r (§4.2).
+    # Serial mode issues round r at the top of iteration r; overlap mode
+    # runs one round ahead — round 0 is issued in a prologue and
+    # iteration r issues round r+1 BEFORE run r's compute, so the
+    # collective is in flight while the kernel works and the commit
+    # below never waits on an in-flight send (double-buffered receive
+    # slots keep the early commit from racing run r's reads).
+    pending = issue(0) if (spec.overlap and spec.n_rounds) else []
+    for r in range(spec.n_runs):
+        if spec.overlap:
+            arrivals = pending if r < spec.n_rounds else []
+            pending = issue(r + 1) if r + 1 < spec.n_rounds else []
+        else:
+            arrivals = issue(r) if r < spec.n_rounds else []
         lo, hi = spec.run_starts[r], spec.run_starts[r + 1]
         if hi > lo and cfg.fused:
             # ONE fused launch for the whole run: step tables drive the
@@ -250,6 +311,11 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
     if cfg.out_dtype is not None:
         # cast before the restore ppermutes: halves restore traffic
         acc_o = acc_o.astype(jnp.dtype(cfg.out_dtype))
+    if layout == "sched":
+        # layer-pipelined path: the caller keeps consuming the schedule
+        # layout, so o stays put (no restore ppermutes at all)
+        o = acc_o[:slots].transpose(0, 2, 1, 3).reshape(tpw, hq, d)
+        return o[None]
     o_u = with_trash(_gather_rows(acc_o[:slots + 1], t["restore_local_src"]))
     for r in range(spec.n_resh_rounds):
         snd = t["restore_send_slot"][r]
@@ -269,22 +335,97 @@ def _fcp_local(q, k, v, t, *, spec: StaticSpec, cp_axis: str,
 def fcp_attention(q, k, v, tables: dict[str, jax.Array], *,
                   spec: StaticSpec, mesh: jax.sharding.Mesh,
                   cp_axis: str = "data", head_axis: str | None = "model",
-                  cfg: ExecConfig = ExecConfig()) -> jax.Array:
+                  cfg: ExecConfig = ExecConfig(),
+                  layout: str = "stream") -> jax.Array:
     """Distributed FCP attention.
 
     q: [F, tpw, HQ, D]; k/v: [F, tpw, KH, D]; ``F`` frames sharded over
     (pod?, data); heads sharded over ``head_axis``.  Returns o (f32) in
-    the same layout — caller never sees the schedule layout (§4.3).
+    the same layout — with the default ``layout="stream"`` the caller
+    never sees the schedule layout (§4.3).  ``layout="sched"`` is the
+    layer-pipelined contract: q/k/v arrive (and o returns) already in
+    the schedule layout, the caller having moved the hidden state once
+    per layer group with :func:`fcp_reshuffle`.
     """
+    if layout not in ("stream", "sched"):
+        raise ValueError(f"unknown layout {layout!r}")
     frame_axes = tuple(a for a in ("pod", cp_axis) if a in mesh.axis_names)
     dspec = P(frame_axes, None, head_axis, None)
     tspec = {k_: (P() if k_.startswith("blk_") else P(cp_axis))
              for k_ in tables}
-    fn = functools.partial(_fcp_local, spec=spec, cp_axis=cp_axis, cfg=cfg)
+    fn = functools.partial(_fcp_local, spec=spec, cp_axis=cp_axis, cfg=cfg,
+                           layout=layout)
     return shard_map(
         fn, mesh=mesh,
         in_specs=(dspec, dspec, dspec, tspec),
         out_specs=dspec, check_vma=False)(q, k, v, tables)
+
+
+def _resh_local(x, t, *, spec: StaticSpec, cp_axis: str, reverse: bool):
+    """Per-device hidden-state reshuffle: x [1, tpw, C] stream layout ->
+    schedule layout (or back when ``reverse``)."""
+    bs, slots = spec.block_size, spec.slots
+    C = x.shape[-1]
+    t = {k_: (v_ if k_.startswith("blk_") else v_[0])
+         for k_, v_ in t.items()}
+    # frame as [slots, 1, bs, C]: wire payloads are [rows, heads, blk,
+    # dim], so the hidden state rides as a single fat "head".  Always
+    # the f32 wire: the hidden state feeds every later layer — the
+    # layer-pipelined path trades per-layer Q/K/V reshuffles for one
+    # exact hidden-state move per group boundary.
+    xf = x[0].reshape(slots, bs, C)[:, None]
+
+    def ship(payload, perm):
+        return wirelib.ship(payload, tuple(perm), cp_axis,
+                            wirelib.WIRE_F32, _SCALE_AXES)
+
+    def with_trash(y):
+        return jnp.concatenate([y, jnp.zeros_like(y[:1])], axis=0)
+
+    xt = with_trash(xf)
+    src = t["restore_local_src"] if reverse else t["resh_local_src"]
+    # mirrors _fcp_local: forward gathers local rows from the stream
+    # frame; restore gathers from the trash-extended schedule frame
+    # (restore_local_src may name the q-trash row)
+    ys = with_trash(_gather_rows(xt if reverse else xf, src))
+    for r in range(spec.n_resh_rounds):
+        snd = (t["restore_send_slot"] if reverse
+               else t["resh_send_slot"])[r]
+        dst = (t["restore_dst_slot"] if reverse
+               else t["resh_dst_slot"])[r]
+        off = 0
+        for g in spec.resh_rounds[r].groups:
+            perm = (tuple((d_, s_) for s_, d_ in g.perm) if reverse
+                    else g.perm)
+            recv = ship(_gather_rows(xt, snd[off:off + g.rows]), perm)
+            ys = ys.at[dst[off:off + g.rows]].set(recv)
+            off += g.rows
+    return ys[:slots, 0].reshape(1, slots * bs, C)
+
+
+def fcp_reshuffle(x, tables: dict[str, jax.Array], *, spec: StaticSpec,
+                  mesh: jax.sharding.Mesh, cp_axis: str = "data",
+                  reverse: bool = False) -> jax.Array:
+    """Move a per-token tensor between the stream and schedule layouts.
+
+    x: [F, tpw, C] (any trailing channel count — hidden state, or
+    hidden state with the rope positions concatenated as one extra f32
+    channel).  Uses the schedule's reshuffle plan (``reverse=False``:
+    stream -> schedule) or restore plan (``reverse=True``: schedule ->
+    stream); payloads always travel the f32 wire (exact).  This is the
+    layer-pipelined reshuffle primitive: move the hidden state once at
+    a layer-group boundary, then run every layer of the group with
+    :func:`fcp_attention` ``layout="sched"`` — per-layer Q/K/V
+    reshuffles and O restores vanish (``docs/overlap.md``).
+    """
+    frame_axes = tuple(a for a in ("pod", cp_axis) if a in mesh.axis_names)
+    dspec = P(frame_axes, None, None)
+    tspec = {k_: (P() if k_.startswith("blk_") else P(cp_axis))
+             for k_ in tables}
+    fn = functools.partial(_resh_local, spec=spec, cp_axis=cp_axis,
+                           reverse=reverse)
+    return shard_map(fn, mesh=mesh, in_specs=(dspec, tspec),
+                     out_specs=dspec, check_vma=False)(x, tables)
 
 
 def schedule_tables(sched: Schedule) -> dict[str, jax.Array]:

@@ -106,7 +106,7 @@ def plan_key(seqlens: Sequence[int], n_workers: int,
              locality: bool | str = "auto",
              alpha: float = 1.0, beta: float = 1.0,
              speeds=None, wire="f32", in_dtype_bytes: float = 4.0,
-             extra: tuple = ()) -> tuple:
+             overlap: bool = False, extra: tuple = ()) -> tuple:
     """Hashable key capturing every input the planner is deterministic
     in: the (canonical) block layout plus all scheduling knobs.
 
@@ -119,14 +119,17 @@ def plan_key(seqlens: Sequence[int], n_workers: int,
     cap, locality, distributor tolerance) and the executor's
     encode/decode graph, so cached plans must never cross wire formats
     (nor compute-dtype itemsizes, which reprice those decisions).
-    ``extra`` folds in caller-side context (e.g. model head counts)."""
+    ``overlap`` is the double-buffered-rounds parity bit: it changes the
+    receive-slot allocation (parity pools) and the executor's pipelined
+    loop, so cached plans must never cross overlap modes.  ``extra``
+    folds in caller-side context (e.g. model head counts)."""
     sp = None if speeds is None else tuple(float(s) for s in speeds)
     return (tuple(int(L) for L in seqlens), int(n_workers),
             int(tokens_per_worker), int(block_size),
             coerce_mask(mask).key(),
             coerce_wire(wire).key() + (float(in_dtype_bytes),),
             int(coalesce), str(locality), float(alpha), float(beta), sp,
-            tuple(extra))
+            tuple(extra), bool(overlap))
 
 
 # --------------------------------------------------------------------------

@@ -307,42 +307,60 @@ class SlotAllocation:
 
 def allocate_recv_slots(
         arrivals: dict[tuple[int, int], Sequence[Hashable]],
-        last_use: dict[tuple[int, Hashable], int],     # (worker,blk)->step
-        n_rounds: int, n_workers: int) -> SlotAllocation:
+        last_use: dict[tuple[int, Hashable], int],     # (worker,blk)->run
+        n_rounds: int, n_workers: int, *,
+        overlap: bool = False) -> SlotAllocation:
     """Greedy interval coloring of received blocks into buffer slots.
 
     ``arrivals`` maps ``(worker, round)`` to the blocks delivered that
     round — a coalesced round delivers up to ``C`` of them.  A block
-    arriving at round ``r`` is live until the compute step of its last
-    consumer; slots are reused afterwards.  Keeps the receive buffer at
+    arriving at round ``r`` is live until the run of its last consumer;
+    slots are reused afterwards.  Keeps the receive buffer at
     max-concurrent-live depth instead of one-slot-per-arrival.
+
+    ``overlap`` is the double-buffering (buffer-parity) liveness rule
+    for the software-pipelined executor: round ``r``'s send is issued
+    *before* run ``r``'s compute, so its commit may land while run ``r``
+    still reads the buffer.  Two changes vs the serial rule:
+
+    * **strict expiry** — a slot frees at round ``r`` only if its
+      occupant's last consuming run is ``< r`` (serial allows ``<= r``,
+      because run ``r`` finishes before round ``r`` commits);
+    * **parity pools** — a slot first allocated at round ``r`` carries
+      parity ``r % 2`` and is only ever reused by arrivals of the same
+      parity.  Consecutive rounds therefore commit into disjoint slot
+      sets (the two halves of a double buffer), which is what lets the
+      executor keep round ``r+1`` in flight during run ``r`` without
+      the in-flight payload racing a pending consumer.
     """
     slot_of: dict[tuple[int, Hashable], int] = {}
     n_slots = 0
     for w in range(n_workers):
-        free: list[int] = []
+        free: dict[int, list[int]] = {0: [], 1: []}   # parity -> slots
         allocated = 0
-        active: list[tuple[int, int]] = []   # (expiry step, slot)
+        active: list[tuple[int, int, int]] = []  # (expiry run, slot, par)
         for r in range(n_rounds):
             blks = arrivals.get((w, r), ())
             if not blks:
                 continue
             # expire slots whose last use is before this round commits
+            par = r % 2 if overlap else 0
             still = []
-            for exp, slot in active:
-                if exp <= r:                 # consumed strictly before now
-                    free.append(slot)
+            for exp, slot, p in active:
+                done = exp < r if overlap else exp <= r
+                if done:
+                    free[p].append(slot)
                 else:
-                    still.append((exp, slot))
+                    still.append((exp, slot, p))
             active = still
             for blk in blks:
-                if free:
-                    slot = free.pop()
+                if free[par]:
+                    slot = free[par].pop()
                 else:
                     slot = allocated
                     allocated += 1
                 exp = last_use.get((w, blk), r + 1)
-                active.append((exp, slot))
+                active.append((exp, slot, par))
                 slot_of[(w, blk)] = slot
         n_slots = max(n_slots, allocated)
     return SlotAllocation(slot_of_arrival=slot_of, n_slots=n_slots)

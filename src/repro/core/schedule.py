@@ -97,6 +97,13 @@ class StaticSpec:
     # encode/decode graph differs per format, so schedules — and hence
     # jit cache entries and plan-cache keys — never cross formats.
     wire: WireFormat = WIRE_F32
+    # buffer-parity bit of the software-pipelined executor: when set,
+    # round r+1's sends are issued before run r's compute and receive
+    # slots are double-buffered (planner.allocate_recv_slots parity
+    # pools, strict expiry).  Part of the spec — the allocator's slot
+    # tables, the verifier's liveness rule and the executor's loop
+    # structure all differ, so plans/jit entries never cross modes.
+    overlap: bool = False
 
     @property
     def n_runs(self) -> int:
@@ -248,6 +255,7 @@ def make_schedule(
         beta: float = 1.0,
         wire: WireFormat | str = WIRE_F32,      # ppermute wire format
         in_dtype_bytes: float = 4.0,            # compute-dtype itemsize
+        overlap: bool = False,                  # double-buffered rounds
         verify: bool | None = None,             # static plan verification
 ) -> Schedule:
     mask = coerce_mask(mask)
@@ -389,7 +397,8 @@ def make_schedule(
                 if not is_local:
                     last_use[(w, j)] = max(last_use.get((w, j), 0), r)
     alloc = plannerlib.allocate_recv_slots(
-        dict(arrivals_by_round), last_use, n_rounds, n_workers)
+        dict(arrivals_by_round), last_use, n_rounds, n_workers,
+        overlap=bool(overlap))
     ext = max(alloc.n_slots, 1 if n_rounds else 0)
 
     # ---- reshuffle plan ----------------------------------------------------
@@ -404,7 +413,7 @@ def make_schedule(
         ext_slots=ext, coalesce=coalesce, n_matchings=n_matchings,
         n_rounds=n_rounds, n_steps=n_steps, n_resh_rounds=n_resh,
         comm_rounds=comm_rounds, resh_rounds=resh_rounds, mask=mask,
-        run_starts=run_starts, wire=wire)
+        run_starts=run_starts, wire=wire, overlap=bool(overlap))
 
     arrays = _build_arrays(batch, spec, assignment, stream_owner, slot_of,
                            comm_groupings, resh_groupings, run_sched,
@@ -476,10 +485,18 @@ def _build_arrays(batch: BlockedBatch, spec: StaticSpec,
             base = spec.run_starts[r]
             # forward order: q-slot-major so the fused kernel's online-
             # softmax accumulator stays resident across the q slot's
-            # whole KV sweep; backward order: kv-slot-major so dk/dv
-            # visit each extended-buffer row contiguously
-            fwd = sorted(run, key=lambda p: (p[0], ext_idx(p[1], p[2])))
-            bwd = sorted(run, key=lambda p: (ext_idx(p[1], p[2]), p[0]))
+            # whole KV sweep; backward order: kv-block-major so dk/dv
+            # visit each extended-buffer row contiguously (within one
+            # run a receive slot holds exactly one block, so block id
+            # and extended slot group identically).  Secondary/primary
+            # keys are BLOCK ids, not slot indices: slot numbering
+            # depends on the receive-buffer allocation (which the
+            # overlap parity bit changes), and keying the merge order
+            # on it would make serial and overlap plans accumulate the
+            # same partials in different orders — bitwise-breaking the
+            # overlap-transparency contract (docs/overlap.md).
+            fwd = sorted(run, key=lambda p: (p[0], p[1]))
+            bwd = sorted(run, key=lambda p: (p[1], p[0]))
             for i, (qs, j, is_local) in enumerate(fwd):
                 step_q[w, base + i] = qs
                 step_kv[w, base + i] = ext_idx(j, is_local)

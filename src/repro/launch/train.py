@@ -56,6 +56,84 @@ def make_fcp_attn_fn(sched: Schedule, mesh, pcfg: ParallelConfig
     return attn
 
 
+@dataclasses.dataclass
+class PipelinedAttn:
+    """One per-layer entry of the layer-pipelined reshuffle
+    (``docs/overlap.md``; consumed duck-typed by
+    :func:`repro.models.transformer.forward`).
+
+    ``attn`` runs FCP attention with ``layout="sched"`` (no per-layer
+    Q/K/V reshuffle or O restore); ``enter``/``exit`` — set only on the
+    first/last layer of a same-mask layer group — move the hidden state
+    (and rope positions) between the stream and schedule layouts via
+    :func:`repro.core.executor.fcp_reshuffle`."""
+    attn: Callable
+    enter: Callable | None = None
+    exit: Callable | None = None
+
+
+def make_pipelined_attn_fns(cfg: ModelConfig, pcfg: ParallelConfig,
+                            layer_masks, scheds, mesh) -> tuple:
+    """Per-layer :class:`PipelinedAttn` entries: the hidden state stays
+    resident in the schedule layout across each run of consecutive
+    same-mask layers and moves once per group boundary, so N layers pay
+    one reshuffle + one restore instead of N of each.  Positions ride
+    the move as one extra f32 channel (token positions are < 2**24, so
+    the f32 wire carries them exactly).  Model-level transform only —
+    schedules and plan keys are those of the non-pipelined run."""
+    if cfg.family not in ("dense", "moe", "audio", "vlm"):
+        raise ValueError(
+            f"layer_pipeline is not supported for family "
+            f"{cfg.family!r} (shared/absent attention)")
+    cfg_exec = ex.ExecConfig(
+        impl=pcfg.attention_impl,
+        block_q=pcfg.attn_block_q, block_k=pcfg.attn_block_k,
+        interpret=pcfg.attn_interpret,
+        out_dtype="bfloat16" if pcfg.attn_out_bf16 else None)
+    head_axis = pcfg.tp_axis if pcfg.tp_axis in mesh.axis_names else None
+
+    def group_fns(m):
+        sched = scheds[m]
+        tables, spec = ex.schedule_tables(sched), sched.spec
+
+        def attn(q, k, v):
+            return ex.fcp_attention(
+                q, k, v, tables, spec=spec, mesh=mesh,
+                cp_axis=pcfg.cp_axis, head_axis=head_axis, cfg=cfg_exec,
+                layout="sched")
+
+        def enter(x, pos):
+            xp = jnp.concatenate(
+                [x.astype(jnp.float32),
+                 pos.astype(jnp.float32)[..., None]], axis=-1)
+            xp = ex.fcp_reshuffle(xp, tables, spec=spec, mesh=mesh,
+                                  cp_axis=pcfg.cp_axis)
+            # exact round trips: bf16 values survive the f32 wire, and
+            # integer positions recover via round
+            return (xp[..., :-1].astype(x.dtype),
+                    jnp.round(xp[..., -1]).astype(pos.dtype))
+
+        def exit_(x):
+            y = ex.fcp_reshuffle(x.astype(jnp.float32), tables,
+                                 spec=spec, mesh=mesh,
+                                 cp_axis=pcfg.cp_axis, reverse=True)
+            return y.astype(x.dtype)
+
+        return attn, enter, exit_
+
+    by_mask = {m: group_fns(m) for m in dict.fromkeys(layer_masks)}
+    n = len(layer_masks)
+    entries = []
+    for i, m in enumerate(layer_masks):
+        attn, enter, exit_ = by_mask[m]
+        first = i == 0 or layer_masks[i - 1] != m
+        last = i == n - 1 or layer_masks[i + 1] != m
+        entries.append(PipelinedAttn(attn=attn,
+                                     enter=enter if first else None,
+                                     exit=exit_ if last else None))
+    return tuple(entries)
+
+
 def layer_mask_specs(cfg: ModelConfig, pcfg: ParallelConfig
                      ) -> tuple[MaskSpec, ...]:
     """Per-layer mask family: the model config's ``attn_mask_pattern``
@@ -88,7 +166,7 @@ def build_schedule(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
         n_q_heads=max(nh, 1), n_kv_heads=max(nkv, 1),
         head_dim=max(cfg.head_dim, 1), mask=mask, speeds=speeds,
         coalesce=pcfg.coalesce, wire=pcfg.comm_dtype,
-        in_dtype_bytes=pcfg.in_dtype_bytes,
+        in_dtype_bytes=pcfg.in_dtype_bytes, overlap=pcfg.overlap,
         locality={"auto": "auto", "on": True, "off": False}.get(
             str(pcfg.locality), pcfg.locality),
         verify=verify)
@@ -104,7 +182,7 @@ def schedule_plan_key(cfg: ModelConfig, pcfg: ParallelConfig, seqlens,
         seqlens, n_cp, tokens_per_worker, pcfg.block_size,
         mask=mask, coalesce=pcfg.coalesce, locality=pcfg.locality,
         speeds=speeds, wire=pcfg.comm_dtype,
-        in_dtype_bytes=pcfg.in_dtype_bytes,
+        in_dtype_bytes=pcfg.in_dtype_bytes, overlap=pcfg.overlap,
         extra=(max(nh, 1), max(nkv, 1), max(cfg.head_dim, 1)))
 
 
@@ -358,9 +436,13 @@ class Supervisor:
         ck = (n, keys)
         if ck not in self._step_cache:
             mesh = self._mesh(n)
-            attn = route_layers(
-                self.cfg, self.layer_masks, self.group_masks,
-                lambda m: make_fcp_attn_fn(scheds[m], mesh, self.pcfg))
+            if self.pcfg.layer_pipeline:
+                attn = make_pipelined_attn_fns(
+                    self.cfg, self.pcfg, self.layer_masks, scheds, mesh)
+            else:
+                attn = route_layers(
+                    self.cfg, self.layer_masks, self.group_masks,
+                    lambda m: make_fcp_attn_fn(scheds[m], mesh, self.pcfg))
             ts = build_train_step(self.model, mesh, self.pcfg,
                                   self.tcfg, attn)
             self._step_cache[ck] = jit_train_step(
@@ -553,6 +635,20 @@ def main(argv=None):
                         " f32 = exact passthrough, bf16 = ~2x fewer"
                         " comm bytes, int8 = ~3.7x with per-(block,"
                         " head) scales (bounded activation/grad error)")
+    p.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                   default=False,
+                   help="software-pipelined executor rounds: issue round"
+                        " r+1's sends before run r's compute and land"
+                        " arrivals in double-buffered receive slots, so"
+                        " the wire overlaps the fused kernel"
+                        " (docs/overlap.md)")
+    p.add_argument("--layer-pipeline",
+                   action=argparse.BooleanOptionalAction, default=False,
+                   help="keep the hidden state resident in the schedule"
+                        " layout across each run of same-mask layers —"
+                        " one reshuffle per layer-group boundary instead"
+                        " of per-layer Q/K/V reshuffles + O restores"
+                        " (docs/overlap.md)")
     p.add_argument("--plan-buckets", type=int, default=0,
                    help="canonical length-bucket edges per doubling"
                         " (0 = raw lengths; >0 bounds the schedule-key"
@@ -618,6 +714,8 @@ def main(argv=None):
                           attn_mask=args.attn_mask,
                           comm_dtype=args.comm_dtype,
                           in_dtype_bytes=_param_dtype_bytes(cfg),
+                          overlap=args.overlap,
+                          layer_pipeline=args.layer_pipeline,
                           plan_buckets=args.plan_buckets,
                           plan_cache_size=args.plan_cache_size,
                           plan_ahead=args.plan_ahead,
@@ -707,6 +805,9 @@ def main(argv=None):
         if key not in step_cache:
             if not cfg.uses_attention:
                 attn = None
+            elif fcp and pcfg.layer_pipeline:
+                attn = make_pipelined_attn_fns(cfg, pcfg, layer_masks,
+                                               scheds, mesh)
             elif fcp:
                 attn = route_layers(
                     cfg, layer_masks, group_masks,

@@ -148,10 +148,21 @@ def forward(params, cfg: ModelConfig, batch: dict,
     (or pre-unembed features for the chunked-loss path).
 
     ``attn_fn`` is either one callable shared by every layer (scanned —
-    one trace for the whole stack) or a per-layer sequence of callables
-    (models that interleave mask families route each layer through its
-    mask group's schedule; the stack unrolls so each group's distinct
+    one trace for the whole stack) or a per-layer sequence (models that
+    interleave mask families route each layer through its mask group's
+    schedule; the stack unrolls so each group's distinct
     executor/schedule closure applies to its own layers).
+
+    A per-layer entry may be a plain callable or a duck-typed object
+    carrying the layer-pipelined reshuffle protocol (``launch.train``
+    builds these; ``docs/overlap.md``): optional ``enter(x, pos) ->
+    (x', pos')`` moves the hidden state (and rope positions) into the
+    entry's layout before the layer runs — first layer of a group —
+    optional ``exit(x) -> x`` moves it back after — last layer of a
+    group — and ``attn`` is the attention callable itself (defaults to
+    the entry).  Layers between enter and exit run with the moved
+    positions, so per-token math is untouched while per-layer Q/K/V
+    reshuffles collapse into one hidden-state move per group.
     """
     x = embed_tokens(params, cfg, batch)
     pos = batch["positions"]
@@ -161,12 +172,20 @@ def forward(params, cfg: ModelConfig, batch: dict,
             raise ValueError(
                 f"per-layer attn_fn sequence has {len(fns)} entries for "
                 f"{cfg.n_layers} layers")
+        cur_pos = pos
         for i, fn in enumerate(fns):
             lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            enter = getattr(fn, "enter", None)
+            if enter is not None:
+                x, cur_pos = enter(x, pos)
             body = apply_remat(
-                functools.partial(_layer_body, cfg=cfg, pos=pos,
-                                  attn_fn=fn), remat)
+                functools.partial(_layer_body, cfg=cfg, pos=cur_pos,
+                                  attn_fn=getattr(fn, "attn", fn)), remat)
             x = body(x, lp)
+            exit_fn = getattr(fn, "exit", None)
+            if exit_fn is not None:
+                x = exit_fn(x)
+                cur_pos = pos
     else:
         body = apply_remat(
             functools.partial(_layer_body, cfg=cfg, pos=pos,

@@ -50,7 +50,7 @@ from .wire import coerce_wire
 _DEFAULT_COALESCE = ParallelConfig().coalesce
 
 
-def _resolve_knobs(coalesce, wire, in_dtype_bytes,
+def _resolve_knobs(coalesce, wire, in_dtype_bytes, overlap,
                    pcfg: ParallelConfig | None):
     """Uniform knob precedence shared by ``replan`` and ``replan_key``:
     explicit argument wins, otherwise ``pcfg`` supplies it, otherwise
@@ -62,11 +62,15 @@ def _resolve_knobs(coalesce, wire, in_dtype_bytes,
             wire = pcfg.comm_dtype
         if in_dtype_bytes is None:
             in_dtype_bytes = pcfg.in_dtype_bytes
+        if overlap is None:
+            overlap = pcfg.overlap
     if coalesce is None:
         coalesce = _DEFAULT_COALESCE
     if in_dtype_bytes is None:
         in_dtype_bytes = ParallelConfig().in_dtype_bytes
-    return coalesce, coerce_wire(wire), in_dtype_bytes
+    if overlap is None:
+        overlap = ParallelConfig().overlap
+    return coalesce, coerce_wire(wire), in_dtype_bytes, bool(overlap)
 
 
 def replan_tpw(seqlens: Sequence[int], new_n_workers: int,
@@ -81,6 +85,7 @@ def replan_tpw(seqlens: Sequence[int], new_n_workers: int,
 def replan_key(seqlens: Sequence[int], new_n_workers: int,
                block_size: int, *, mask=True, coalesce: int | None = None,
                wire=None, in_dtype_bytes: float | None = None,
+               overlap: bool | None = None,
                speeds=None, pcfg: ParallelConfig | None = None) -> tuple:
     """The exact plan-cache key ``replan`` stores under.
 
@@ -90,18 +95,20 @@ def replan_key(seqlens: Sequence[int], new_n_workers: int,
     between the two would silently turn every recovery into a cold
     plan."""
     mask = coerce_mask(mask)
-    coalesce, wire, in_dtype_bytes = _resolve_knobs(
-        coalesce, wire, in_dtype_bytes, pcfg)
+    coalesce, wire, in_dtype_bytes, overlap = _resolve_knobs(
+        coalesce, wire, in_dtype_bytes, overlap, pcfg)
     tpw = replan_tpw(seqlens, new_n_workers, block_size)
     return pc.plan_key(seqlens, new_n_workers, tpw, block_size,
                        mask=mask, coalesce=coalesce, wire=wire,
-                       in_dtype_bytes=in_dtype_bytes, speeds=speeds)
+                       in_dtype_bytes=in_dtype_bytes, overlap=overlap,
+                       speeds=speeds)
 
 
 def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            *, n_q_heads: int, n_kv_heads: int, head_dim: int,
            mask=True, coalesce: int | None = None,
            wire=None, in_dtype_bytes: float | None = None,
+           overlap: bool | None = None,
            speeds: np.ndarray | None = None,
            pcfg: ParallelConfig | None = None,
            cache: pc.PlanCache | None = None,
@@ -126,9 +133,13 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     plan-cache key, so schedules of different mask families never mix.
     ``wire`` (or ``pcfg.comm_dtype``) is preserved the same way: a
     resize must not silently fall back to the f32 wire, and plans of
-    different wire formats never share a cache entry.  For both knobs
-    the precedence is uniform: an explicit argument wins, otherwise
-    ``pcfg`` supplies it, otherwise the repo default.
+    different wire formats never share a cache entry.  ``overlap`` (or
+    ``pcfg.overlap``) — the double-buffered-rounds parity bit — rides
+    the same way: a resize must keep the executor's pipelining mode,
+    and serial/overlap plans allocate receive slots differently so they
+    never share a cache entry.  For every knob the precedence is
+    uniform: an explicit argument wins, otherwise ``pcfg`` supplies it,
+    otherwise the repo default.
 
     Replans are statically verified by default (``verify=True`` —
     :mod:`repro.analysis.verifier`): an elastic resize happens once per
@@ -137,8 +148,8 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     the process default) to opt out.
     """
     mask = coerce_mask(mask)
-    coalesce, wire, in_dtype_bytes = _resolve_knobs(
-        coalesce, wire, in_dtype_bytes, pcfg)
+    coalesce, wire, in_dtype_bytes, overlap = _resolve_knobs(
+        coalesce, wire, in_dtype_bytes, overlap, pcfg)
     tpw = replan_tpw(seqlens, new_n_workers, block_size)
 
     def build() -> Schedule:
@@ -146,14 +157,16 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
                              n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
                              head_dim=head_dim, mask=mask,
                              coalesce=coalesce, wire=wire,
-                             in_dtype_bytes=in_dtype_bytes, speeds=speeds,
+                             in_dtype_bytes=in_dtype_bytes,
+                             overlap=overlap, speeds=speeds,
                              verify=verify)
 
     if cache is None:
         return build()
     key = pc.plan_key(seqlens, new_n_workers, tpw, block_size,
                       mask=mask, coalesce=coalesce, wire=wire,
-                      in_dtype_bytes=in_dtype_bytes, speeds=speeds)
+                      in_dtype_bytes=in_dtype_bytes, overlap=overlap,
+                      speeds=speeds)
     return cache.get_or_build(key, build)
 
 
@@ -162,6 +175,7 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
                   n_kv_heads: int, head_dim: int,
                   coalesce: int | None = None,
                   wire=None, in_dtype_bytes: float | None = None,
+                  overlap: bool | None = None,
                   speeds: np.ndarray | None = None,
                   pcfg: ParallelConfig | None = None,
                   cache: pc.PlanCache | None = None,
@@ -184,8 +198,8 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
                         n_q_heads=n_q_heads, n_kv_heads=n_kv_heads,
                         head_dim=head_dim, mask=m, coalesce=coalesce,
                         wire=wire, in_dtype_bytes=in_dtype_bytes,
-                        speeds=speeds, pcfg=pcfg, cache=cache,
-                        verify=verify)
+                        overlap=overlap, speeds=speeds, pcfg=pcfg,
+                        cache=cache, verify=verify)
     return out
 
 

@@ -32,6 +32,15 @@ Exactness is preserved everywhere except the wire: encode happens right
 before a payload is gathered into a collective, decode on arrival commit
 into the receive buffer's compute dtype, so kernels, merge math, and
 plan tables are untouched.
+
+Under the software-pipelined round loop (``StaticSpec.overlap``,
+docs/overlap.md) the executor issues :func:`ship` for round ``r+1``
+*before* computing run ``r`` — the call returns the decoded arrivals
+as a value that is only committed one iteration later, so a shipped
+payload may be in flight across a whole fused run.  Nothing in the
+codec changes: legality comes from the planner's double-buffered
+receive slots and the executor's immutable send-source snapshot, and
+the backward pass reverses each ship independently, pipelined or not.
 """
 
 from __future__ import annotations

@@ -40,6 +40,7 @@ _COALESCE = (1, 2, 3, 4, 8, 16)
 _WIRES = ("f32", "bf16", "int8")
 _IN_BYTES = (4.0, 2.0)
 _LOCALITY = ("auto", True, False)
+_OVERLAP = (False, True)
 
 
 def _random_seqlens(rng: np.random.Generator, budget: int,
@@ -86,6 +87,7 @@ def _random_case(rng: np.random.Generator) -> dict:
         wire=str(rng.choice(_WIRES)),
         in_dtype_bytes=float(rng.choice(_IN_BYTES)),
         locality=_LOCALITY[int(rng.integers(len(_LOCALITY)))],
+        overlap=bool(rng.choice(_OVERLAP)),
         speeds=speeds,
         n_q_heads=int(rng.choice((1, 2, 8))),
         n_kv_heads=1, head_dim=int(rng.choice((32, 64, 128))))
@@ -104,13 +106,15 @@ def verify_case(case: dict) -> list:
         case["block_size"], n_q_heads=nh, n_kv_heads=nkv, head_dim=hd,
         mask=case["mask"], coalesce=case["coalesce"], wire=case["wire"],
         in_dtype_bytes=case["in_dtype_bytes"],
-        locality=case["locality"], speeds=case["speeds"],
+        locality=case["locality"], overlap=case.get("overlap", False),
+        speeds=case["speeds"],
         verify=False)                        # the harness IS the verifier
     key = pc.plan_key(
         case["seqlens"], case["n_workers"], case["tokens_per_worker"],
         case["block_size"], mask=case["mask"], coalesce=case["coalesce"],
         wire=case["wire"], in_dtype_bytes=case["in_dtype_bytes"],
-        locality=case["locality"], speeds=case["speeds"],
+        locality=case["locality"], overlap=case.get("overlap", False),
+        speeds=case["speeds"],
         extra=(nh, nkv, hd))
     return verifier.verify_schedule(
         sched, n_q_heads=nh, n_kv_heads=nkv, head_dim=hd,
@@ -122,6 +126,7 @@ def _describe(case: dict) -> str:
             f"tpw={case['tokens_per_worker']} mask={case['mask']} "
             f"coalesce={case['coalesce']} wire={case['wire']} "
             f"inb={case['in_dtype_bytes']} loc={case['locality']} "
+            f"ov={int(case.get('overlap', False))} "
             f"ndocs={len(case['seqlens'])}")
 
 
@@ -178,7 +183,8 @@ def fuzz_elastic(n_cases: int, seed: int, verbose: bool = False) -> int:
                 _c["seqlens"], nw, _c["block_size"], n_q_heads=_nh,
                 n_kv_heads=_nkv, head_dim=_hd, mask=_c["mask"],
                 coalesce=_c["coalesce"], wire=_c["wire"],
-                in_dtype_bytes=_c["in_dtype_bytes"], speeds=_sp(sp),
+                in_dtype_bytes=_c["in_dtype_bytes"],
+                overlap=_c.get("overlap", False), speeds=_sp(sp),
                 cache=_cache, verify=False)
 
         def _sp(sp):
@@ -207,7 +213,8 @@ def fuzz_elastic(n_cases: int, seed: int, verbose: bool = False) -> int:
                 case["seqlens"], n - 1, case["block_size"],
                 mask=case["mask"], coalesce=case["coalesce"],
                 wire=case["wire"],
-                in_dtype_bytes=case["in_dtype_bytes"], speeds=surv)
+                in_dtype_bytes=case["in_dtype_bytes"],
+                overlap=case.get("overlap", False), speeds=surv)
             violations += verifier.verify_schedule(
                 sched, n_q_heads=nh, n_kv_heads=nkv, head_dim=hd,
                 in_dtype_bytes=case["in_dtype_bytes"], key=key)
@@ -257,6 +264,9 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--wire", default="f32")
     ap.add_argument("--in-dtype-bytes", type=float, default=4.0)
     ap.add_argument("--locality", default="auto")
+    ap.add_argument("--overlap", action="store_true",
+                    help="verify the double-buffered (software-"
+                         "pipelined) variant of the plan")
     ap.add_argument("--heads", type=int, default=8)
     ap.add_argument("--kv-heads", type=int, default=8)
     ap.add_argument("--head-dim", type=int, default=128)
@@ -295,7 +305,8 @@ def main(argv: Sequence[str] | None = None) -> int:
         seqlens=args.seqlens, n_workers=args.workers,
         tokens_per_worker=tpw, block_size=bs, mask=args.mask,
         coalesce=args.coalesce, wire=args.wire,
-        in_dtype_bytes=args.in_dtype_bytes, locality=loc, speeds=None,
+        in_dtype_bytes=args.in_dtype_bytes, locality=loc,
+        overlap=args.overlap, speeds=None,
         n_q_heads=args.heads, n_kv_heads=args.kv_heads,
         head_dim=args.head_dim)
     violations = verify_case(case)

@@ -319,12 +319,15 @@ def _check_schedule_invariants(sched, n_workers):
             b = sorted(zip(arr.bwd_q[w, lo:hi].tolist(),
                            arr.bwd_kv[w, lo:hi].tolist()))
             assert f == b, f"bwd tables diverge: worker {w} run {r}"
-            # forward steps are q-slot-sorted, backward kv-slot-sorted
+            # forward steps are q-slot-sorted, backward kv-BLOCK-sorted
+            # (block ids, not recv-slot indices: slot numbering shifts
+            # with the overlap parity allocator, and the merge order
+            # must stay identical across serial and overlap plans)
             fq = [q for q in arr.step_q[w, lo:hi].tolist()
                   if q != spec.q_trash]
             assert fq == sorted(fq)
-            bk = [kv for q, kv in zip(arr.bwd_q[w, lo:hi].tolist(),
-                                      arr.bwd_kv[w, lo:hi].tolist())
+            bk = [blk for q, blk in zip(arr.bwd_q[w, lo:hi].tolist(),
+                                        arr.bwd_kv_blk[w, lo:hi].tolist())
                   if q != spec.q_trash]
             assert bk == sorted(bk)
 

@@ -51,6 +51,8 @@ def _names(sched, **kw):
     {"mask": "chunked:512", "wire": "int8", "in_dtype_bytes": 2.0},
     {"n_workers": 2, "tokens_per_worker": 8192, "coalesce": 1},
     {"speeds": np.array([1.0, 0.6, 1.2, 0.9])},
+    {"overlap": True},
+    {"overlap": True, "coalesce": 1, "mask": "swa:1024"},
 ])
 def test_real_plans_have_no_violations(kw):
     s = _sched(**kw)
@@ -150,6 +152,54 @@ def _mutate_misprice(s):
     return False
 
 
+# --------------------------------------------------------------------------
+# overlap (double-buffered rounds) parity bit
+# --------------------------------------------------------------------------
+
+def test_serial_plan_relabeled_overlap_killed_by_liveness():
+    """The wrong parity bit is a real corruption: a serial plan's
+    receive-slot allocator reuses a slot in the round right after its
+    occupant's last use, which under the pipelined loop means round
+    r+1's early commit overwrites a block run r is still reading.
+    Relabeling a clean serial plan as overlap must be killed by
+    recv-slot-liveness (the verifier's tightened overlap bound)."""
+    s = _sched(coalesce=1)
+    assert verifier.verify_schedule(s) == []
+    s.spec = dataclasses.replace(s.spec, overlap=True)
+    flagged = _names(s)
+    assert flagged == ["recv-slot-liveness"], \
+        f"expected only recv-slot-liveness, got {flagged}"
+
+
+def test_overlap_plan_relabeled_serial_stays_clean():
+    """The converse relabel is wasteful (double buffers nobody races)
+    but SAFE: the serial loop's stricter timing satisfies the overlap
+    allocation, so only the spec-key check can tell them apart."""
+    s = _sched(coalesce=1, overlap=True)
+    s.spec = dataclasses.replace(s.spec, overlap=False)
+    assert _names(s) == []
+
+
+def test_overlap_recv_slots_double_buffer():
+    """Consecutive rounds commit into disjoint receive-slot halves (the
+    buffer-parity allocation) and the buffer grows vs serial."""
+    serial = _sched(coalesce=1)
+    s = _sched(coalesce=1, overlap=True)
+    assert s.spec.ext_slots >= serial.spec.ext_slots
+    a, spec = s.arrays, s.spec
+    checked = 0
+    for w in range(spec.n_workers):
+        per_round = []
+        for r in range(spec.n_rounds):
+            per_round.append({int(x) for x in a.recv_slot[w, r]
+                              if x != spec.kv_trash})
+        for r in range(1, len(per_round)):
+            assert not (per_round[r] & per_round[r - 1]), \
+                f"worker {w}: rounds {r - 1},{r} share a recv slot"
+            checked += 1
+    assert checked > 0
+
+
 MUTATIONS = [
     ("swap-sends", _mutate_swap_sends, "arrival-before-use"),
     ("drop-arrival", _mutate_drop_arrival, "arrival-before-use"),
@@ -196,6 +246,8 @@ def test_plan_key_mismatch_is_flagged():
                     mask="swa:256"),
         pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4,
                     wire="int8"),
+        pc.plan_key(BASE["seqlens"], 4, 4096, 128, coalesce=4,
+                    overlap=True),
         pc.plan_key([4096] * 4, 4, 4096, 128, coalesce=4),
     ]:
         out = verifier.verify_plan_key(bad, s)
