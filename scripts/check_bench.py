@@ -79,6 +79,19 @@ ELASTIC_LIMITS = {
 }
 
 
+# Absolute serving contracts (ISSUE 9 acceptance).  Single source:
+# benchmarks/bench_serve.py imports these for its in-bench asserts, so
+# the bench and the CI gate can never disagree.  After the warmup pass
+# (which mints every bucket's plan and compiles every program), the
+# measured stream must re-hit the plan cache on every prefill batch and
+# recompile nothing — the whole point of length-bucketed canonical
+# prefill layouts.
+SERVE_LIMITS = {
+    "prefill_hit_rate": 0.9,
+    "recompiles_after_warmup": 0.0,
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class Gate:
     path: str                  # dotted path into the benchmark JSON
@@ -163,6 +176,24 @@ GATES: dict[str, list[Gate]] = {
              exact=True),
         Gate("steady_state.plan_amortization_x", lower_is_better=False,
              rel_tol=0.5),      # µs-scale denominator: generous tol
+    ],
+    "BENCH_serve.json": [
+        # plan-cache reuse on prefill batches and compile stability are
+        # ABSOLUTE serving contracts, not baseline-relative
+        Gate("stream.plan_cache.hit_rate", lower_is_better=False,
+             limit=SERVE_LIMITS["prefill_hit_rate"]),
+        Gate("stream.plan_cache.misses", lower_is_better=True,
+             limit=0.0),
+        Gate("stream.recompiles_after_warmup", lower_is_better=True,
+             limit=SERVE_LIMITS["recompiles_after_warmup"]),
+        # p99 prefill latency normalizes like the other wall-clock rows;
+        # sustained throughput is higher-is-better, where the
+        # calibration ratio runs the WRONG direction (it would shrink a
+        # slow runner's tok/s further) — gate it raw with generous tol
+        Gate("stream.prefill_ms.p99", lower_is_better=True,
+             normalize=True, rel_tol=0.5),
+        Gate("stream.sustained_tok_s", lower_is_better=False,
+             rel_tol=0.5),
     ],
 }
 

@@ -63,8 +63,11 @@ run_test() {
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.bench_planner --quick \
         --out bench_out/BENCH_planner.json
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.bench_serve --quick \
+        --out bench_out/BENCH_serve.json
     python scripts/check_bench.py --baseline . --fresh bench_out \
-        --only BENCH_executor.json,BENCH_planner.json
+        --only BENCH_executor.json,BENCH_planner.json,BENCH_serve.json
 }
 
 run_multidevice() {

@@ -203,6 +203,36 @@ class ParallelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving knobs (``runtime/serving.py``).
+
+    The serving loop admits requests into a bounded queue, prefills
+    prompts through FCP in length-bucketed uniform batches (every batch
+    re-hits the plan cache), and decodes on a fixed pool of batch slots
+    against the sequence-sharded cache.  All static shapes the loop
+    compiles against come from here, so a fixed ``ServeConfig`` means a
+    fixed, warmup-bounded set of XLA compilations.
+    """
+    cache_len: int = 512           # decode KV/state cache length per slot
+    decode_slots: int = 8          # continuous-batching decode batch size
+    queue_depth: int = 64          # admission-controlled queue bound
+    max_new_tokens: int = 32       # per-request generation cap
+    # prefill batch geometry: one FCP composition of
+    # ``n_cp * prefill_tokens_per_worker`` tokens, cut into
+    # ``budget / bucket`` sequences of one bucket edge each.  Edges run
+    # geometrically from ``bucket_min`` up to the budget (divisor edges
+    # only), so the plan-key space is tiny and every mixed-length
+    # stream collapses onto it.
+    prefill_tokens_per_worker: int = 512
+    bucket_min: int = 64           # smallest prefill bucket edge
+    prefill_impl: str = "fcp"      # "fcp" | "dense" (escape hatch)
+    kind: str = "decode"           # decode cache layout ("decode"|"long")
+
+    def replace(self, **kw) -> "ServeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainConfig:
     seq_len: int = 4096
     global_batch: int = 256

@@ -97,6 +97,64 @@ def canonicalize_lengths(seqlens: Sequence[int], budget: int,
 
 
 # --------------------------------------------------------------------------
+# serving-prefill canonical layouts
+# --------------------------------------------------------------------------
+
+def prefill_bucket_edges(min_len: int, budget: int) -> list[int]:
+    """Serving prefill bucket edges: the geometric edge set restricted
+    to divisors of ``budget``.
+
+    A serving prefill batch is a *uniform* composition — ``budget /
+    edge`` sequences all padded (or chunked) to one edge — so each edge
+    must divide the budget exactly or the batch cannot tile it.  With
+    ``budget / min_len`` a power of two every geometric edge divides;
+    otherwise the non-divisor edges are dropped (and at least the
+    budget itself always qualifies when ``min_len`` divides it)."""
+    budget, min_len = int(budget), int(min_len)
+    if budget <= 0 or min_len <= 0:
+        raise ValueError("budget and min_len must be positive")
+    edges = [e for e in length_bucket_edges(min_len, budget)
+             if e <= budget and budget % e == 0]
+    if not edges:
+        raise ValueError(
+            f"no prefill bucket edge in [{min_len}, {budget}] divides "
+            f"the budget {budget}; pick bucket_min dividing the budget "
+            f"(ideally budget/bucket_min a power of two)")
+    return edges
+
+
+def prefill_composition(bucket_len: int, budget: int) -> tuple[int, ...]:
+    """Canonical composition of one serving prefill batch: ``budget /
+    bucket_len`` sequences of exactly ``bucket_len`` tokens.
+
+    Every prompt whose length falls in the same bucket maps onto this
+    layout, so a mixed-length request stream mints at most one plan key
+    (and one executor compile) per bucket edge."""
+    bucket_len, budget = int(bucket_len), int(budget)
+    if bucket_len <= 0 or budget % bucket_len:
+        raise ValueError(
+            f"bucket_len {bucket_len} must divide the prefill budget "
+            f"{budget}")
+    return (bucket_len,) * (budget // bucket_len)
+
+
+def prefill_plan_key(bucket_len: int, budget: int, n_workers: int,
+                     block_size: int, *, mask=True, coalesce: int = 1,
+                     locality: bool | str = "auto", wire="f32",
+                     in_dtype_bytes: float = 4.0, overlap: bool = False,
+                     extra: tuple = ()) -> tuple:
+    """Plan-cache key of one serving prefill bucket — :func:`plan_key`
+    over the canonical uniform composition, so every prefill batch of
+    the same bucket re-hits the same schedule (and the executor's jit
+    cache) no matter which requests fill it."""
+    return plan_key(
+        prefill_composition(bucket_len, budget), n_workers,
+        int(budget) // int(n_workers), block_size, mask=mask,
+        coalesce=coalesce, locality=locality, wire=wire,
+        in_dtype_bytes=in_dtype_bytes, overlap=overlap, extra=extra)
+
+
+# --------------------------------------------------------------------------
 # cache key
 # --------------------------------------------------------------------------
 

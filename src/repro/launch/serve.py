@@ -122,9 +122,26 @@ def jit_decode_step(decode_step, mesh, params_like, cache_like, batch_size,
 # --------------------------------------------------------------------------
 
 def build_prefill_step(model: Model, mesh, attn_fn: Callable,
-                       batch_size: int, seq_len: int, remat: bool = True):
-    """Returns ``prefill_step(params, batch) -> (last_logits, cache)``."""
+                       batch_size: int, seq_len: int, remat: bool = True,
+                       ragged: bool = False):
+    """Returns ``prefill_step(params, batch) -> (last_logits, cache)``.
+
+    With ``ragged=True`` (attention families only) the returned step is
+    ``prefill_step(params, batch, last_idx)``: each sequence's logits
+    are gathered at its *true* last-token index instead of position
+    ``seq_len - 1``, so right-padded prompts prefill exactly — under a
+    causal mask real tokens never attend the padding, and the padded
+    cache tail is masked (then progressively overwritten) at decode
+    time.  Recurrent families cannot pad-up exactly (the state scans
+    the padding), so they reject ``ragged`` and chunk instead
+    (``runtime/serving.py``)."""
     cfg = model.cfg
+    if ragged and cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"ragged prefill is exact only for attention families; "
+            f"{cfg.family!r} states would scan the padding — chunk the "
+            f"prompt instead (round down to a bucket edge and "
+            f"teacher-force the tail)")
 
     def prefill_step(params, batch):
         if cfg.family == "ssm":
@@ -162,24 +179,64 @@ def build_prefill_step(model: Model, mesh, attn_fn: Callable,
         lg = logits.reshape(batch_size, seq_len, -1)[:, -1]
         return lg, {"k": ks, "v": vs}
 
-    return prefill_step
+    if not ragged:
+        return prefill_step
+
+    def ragged_prefill_step(params, batch, last_idx):
+        if cfg.family == "hybrid":
+            raise AssertionError("unreachable: rejected above")
+        logits, ks, vs = tflib.forward_prefill(params, cfg, batch, attn_fn,
+                                               remat=remat)
+        lyr, f, t, kh, dh = ks.shape
+        ks = ks.reshape(lyr, batch_size, seq_len, kh, dh)
+        vs = vs.reshape(lyr, batch_size, seq_len, kh, dh)
+        lg = logits.reshape(batch_size, seq_len, -1)[
+            jnp.arange(batch_size), last_idx]
+        return lg, {"k": ks, "v": vs}
+
+    return ragged_prefill_step
 
 
 # --------------------------------------------------------------------------
-# CLI driver: batched greedy decoding end-to-end
+# CLI driver: continuous-batching serving over a mixed-length stream
 # --------------------------------------------------------------------------
+
+def serving_stream(rng, vocab: int, n: int, min_len: int, max_len: int,
+                   ) -> list[np.ndarray]:
+    """Synthetic mixed-length request stream (uniform prompt lengths)."""
+    lens = rng.integers(min_len, max_len + 1, (n,))
+    return [rng.integers(1, vocab, (int(L),)).astype(np.int32)
+            for L in lens]
+
 
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--mesh", default="1x1")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--cache-len", type=int, default=256)
-    p.add_argument("--prompt-len", type=int, default=32)
-    p.add_argument("--tokens", type=int, default=16)
+    p.add_argument("--cache-len", type=int, default=512)
     p.add_argument("--kind", default="decode", choices=["decode", "long"])
     p.add_argument("--override", action="append", default=[])
+    # serving-loop knobs (ServeConfig / runtime/serving.py)
+    p.add_argument("--slots", type=int, default=8,
+                   help="decode batch slots (continuous batching)")
+    p.add_argument("--requests", type=int, default=32,
+                   help="synthetic request-stream length")
+    p.add_argument("--tokens", type=int, default=16,
+                   help="tokens to generate per request")
+    p.add_argument("--queue-depth", type=int, default=64)
+    p.add_argument("--prefill-impl", default="fcp",
+                   choices=["fcp", "dense"],
+                   help="bucketed FCP prefill, or the dense escape "
+                        "hatch (also the 1-worker path)")
+    p.add_argument("--prefill-tokens-per-worker", type=int, default=256)
+    p.add_argument("--bucket-min", type=int, default=32,
+                   help="smallest prefill bucket edge")
+    p.add_argument("--block-size", type=int, default=0,
+                   help="FCP scheduling block (0 = auto)")
+    p.add_argument("--prompt-len", type=int, default=128,
+                   help="max prompt length in the synthetic stream")
+    p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     dims = [int(x) for x in args.mesh.split("x")]
@@ -193,33 +250,57 @@ def main(argv=None):
     model = Model(cfg, tp=tp)
     params = model.init(jax.random.key(0))
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(1, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
+    from ..configs.base import ParallelConfig, ServeConfig
+    from ..runtime.serving import ServingLoop
+    from .train import _param_dtype_bytes
+    tpw = args.prefill_tokens_per_worker
+    block = args.block_size or min(4096, tpw)
+    pcfg = ParallelConfig(block_size=block,
+                          in_dtype_bytes=_param_dtype_bytes(cfg))
+    scfg = ServeConfig(
+        cache_len=args.cache_len, decode_slots=args.slots,
+        queue_depth=args.queue_depth, max_new_tokens=args.tokens,
+        prefill_tokens_per_worker=tpw, bucket_min=args.bucket_min,
+        prefill_impl=args.prefill_impl, kind=args.kind)
+    loop = ServingLoop(model, params, mesh, pcfg, scfg)
 
-    cache = model.init_cache(args.batch, args.cache_len)
-    decode_step, batch_axis, seq_axes = build_decode_step(model, mesh,
-                                                          args.kind)
-    step = jit_decode_step(decode_step, mesh, params, cache, args.batch,
-                           batch_axis, seq_axes)
+    rng = np.random.default_rng(args.seed)
+    max_len = min(args.prompt_len, args.cache_len - args.tokens)
+    if max_len < 1:
+        raise SystemExit("--cache-len must exceed --tokens")
 
-    # feed the prompt token-by-token (teacher forcing), then decode
-    t0 = time.time()
-    toks = prompts[:, 0]
-    generated = []
-    for i in range(args.prompt_len + args.tokens - 1):
-        pos = jnp.full((args.batch,), i, jnp.int32)
-        nxt, logits, cache = step(params, jnp.asarray(toks), pos, cache)
-        if i + 1 < args.prompt_len:
-            toks = prompts[:, i + 1]
-        else:
-            toks = np.asarray(nxt)
-            generated.append(toks)
-    dt = time.time() - t0
-    gen = np.stack(generated, axis=1)
-    print(f"generated {gen.shape} tokens in {dt:.2f}s "
-          f"({args.batch * gen.shape[1] / dt:.1f} tok/s)")
-    print("sample:", gen[0][:16])
+    # warmup: one request per admissible bucket compiles every prefill
+    # shape and the decode loop; the measured stream then recompiles
+    # nothing
+    t0 = time.perf_counter()
+    base = loop.warmup()
+    warm_s = time.perf_counter() - t0
+
+    stream = serving_stream(rng, cfg.vocab_size, args.requests, 1, max_len)
+    report = loop.run(stream, max_new=args.tokens)
+    recompiles = (sum(loop.compile_counts().values())
+                  - sum(base.values()))
+
+    print(f"warmup {warm_s:.2f}s over buckets {loop.edges} "
+          f"({args.prefill_impl} prefill)")
+    print(f"served {report['requests']} requests / "
+          f"{report['generated_tokens']} tokens in "
+          f"{report['wall_s']:.2f}s "
+          f"({report['sustained_tok_s']:.1f} tok/s sustained)")
+    print(f"prefill: {report['prefill_batches']} batches, fill "
+          f"{report['prefill_fill']:.2f}, p99 "
+          f"{report['prefill_ms']['p99']:.1f}ms | decode: "
+          f"{report['decode_steps']} steps, p99 "
+          f"{report['decode_ms']['p99']:.1f}ms | queue p99 "
+          f"{report['queue_ms']['p99']:.1f}ms")
+    print(f"recompiles after warmup: {recompiles}")
+    if "plan_cache" in report:
+        pcs = report["plan_cache"]
+        print(f"plan cache: {pcs['hits']} hits / {pcs['misses']} misses "
+              f"(hit rate {pcs['hit_rate']:.2f})")
+    for r in loop.stats.finished[:1]:
+        print("sample:", np.asarray(r.tokens)[:16])
+    return report
 
 
 if __name__ == "__main__":

@@ -1,0 +1,722 @@
+"""Continuous-batching FCP serving loop: queue, prefill buckets, slots.
+
+The training side amortizes planning by canonicalizing batch layouts
+onto a small set of plan-cache keys; this module turns the same
+machinery into a serving loop (ROADMAP item 1, Orca/vLLM-style):
+
+* :class:`RequestQueue` — bounded admission-controlled queue.  A
+  request that cannot fit the decode cache (``prompt_len +
+  max_new_tokens > cache_len``) is rejected **up front** with the
+  required length — the masked ``cp_cache_update`` write would
+  otherwise drop the overflow silently.
+* **Bucketed FCP prefill** — prompts prefill in *uniform* batches of
+  ``budget / E`` sequences padded (attention families) or chunked
+  (recurrent families) to one bucket edge ``E``
+  (:func:`repro.core.plan_cache.prefill_composition`).  Every batch of
+  a bucket re-hits the same :func:`~repro.core.plan_cache.plan_key` —
+  and therefore the same interned ``StaticSpec`` and executor jit
+  entry — so a mixed-length request stream compiles once per bucket
+  and never again.
+* **Exactness per family** — attention families pad *up* to the edge:
+  under the causal mask real tokens never attend the padding, padded
+  cache entries are masked by the decode ``lengths`` until overwritten,
+  and the ragged last-index gather reads each prompt's true last
+  logits.  Recurrent families (ssm/hybrid) chunk *down* (the state
+  must not scan padding); the short tail teacher-forces through the
+  decode loop **on device** — both paths take exactly one FCP prefill
+  call per request.
+* :class:`ServingLoop` — slot-based continuous batching: a fixed
+  decode batch of ``decode_slots`` sequences against the
+  sequence-sharded cache.  Finished sequences self-freeze on device
+  (``active`` mask), free slots refill from the queue each scheduling
+  round, and nothing recompiles — slot indices are traced, cache rows
+  are written with ``dynamic_update_slice``.
+* **No per-token host sync** — next-token ids, teacher-forced tails
+  and generated tokens all live in a device-resident state dict; the
+  host mirrors completion counters deterministically (generation
+  advances iff the tail is exhausted, which the host knows) and
+  fetches a slot's tokens only when its request finishes.
+* :class:`LatencyStats` — per-request queue/prefill/decode p50/p99 and
+  sustained tokens/sec, all on ``time.perf_counter``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ParallelConfig, ServeConfig
+from ..core import plan_cache as pc
+from ..launch import serve as servelib
+from ..launch import train as trainlib
+from ..models import Model, dense_attn_fn
+from ..parallel import sharding as sh
+
+RECURRENT = ("ssm", "hybrid")
+
+
+class QueueFull(RuntimeError):
+    """Admission control: the request queue is at ``queue_depth``."""
+
+
+# --------------------------------------------------------------------------
+# requests + latency accounting
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # int32 [prompt_len]
+    max_new: int
+    bucket: int                     # prefill bucket edge E (0 = no chunk)
+    mode: str                       # "pad" | "chunk" | "fresh"
+    submit_t: float = 0.0
+    queue_ms: float = 0.0
+    prefill_ms: float = 0.0         # wall of the prefill batch it rode
+    insert_t: float = 0.0
+    finish_t: float = 0.0
+    decode_ms: float = 0.0
+    total_ms: float = 0.0
+    tokens: np.ndarray | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def tail_tokens(self) -> int:
+        """Prompt tokens teacher-forced through the decode loop (0 for
+        the pad-up path: the whole prompt rides the one prefill call)."""
+        return self.prompt_len - self.bucket if self.mode != "pad" else 0
+
+
+def _pct(xs: Sequence[float]) -> dict:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+class LatencyStats:
+    """Per-request latency accounting (``time.perf_counter`` ms)."""
+
+    def __init__(self):
+        self.finished: list[Request] = []
+
+    def add(self, req: Request) -> None:
+        self.finished.append(req)
+
+    def summary(self) -> dict:
+        rs = self.finished
+        return {
+            "requests": len(rs),
+            "generated_tokens": int(sum(r.max_new for r in rs)),
+            "tail_tokens": int(sum(r.tail_tokens for r in rs)),
+            "queue_ms": _pct([r.queue_ms for r in rs]),
+            "prefill_ms": _pct([r.prefill_ms for r in rs]),
+            "decode_ms": _pct([r.decode_ms for r in rs]),
+            "total_ms": _pct([r.total_ms for r in rs]),
+        }
+
+
+class RequestQueue:
+    """Bounded FIFO with up-front cache-overrun validation."""
+
+    def __init__(self, scfg: ServeConfig):
+        self.scfg = scfg
+        self._q: deque[Request] = deque()
+        self._next_rid = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def validate(self, prompt_len: int, max_new: int, bucket: int,
+                 mode: str) -> None:
+        scfg = self.scfg
+        if prompt_len < 1:
+            raise ValueError("empty prompt")
+        if not 1 <= max_new <= scfg.max_new_tokens:
+            raise ValueError(
+                f"max_new {max_new} outside [1, {scfg.max_new_tokens}] "
+                f"(ServeConfig.max_new_tokens caps the generation "
+                f"buffer)")
+        # the decode loop writes positions [start, prompt_len + max_new)
+        # and the pad-up prefill writes [0, bucket); past cache_len the
+        # masked cp_cache_update would DROP the write silently, so the
+        # overrun is rejected here, with the length that would fit
+        need = max(bucket if mode == "pad" else 0,
+                   prompt_len + max_new)
+        if need > scfg.cache_len:
+            raise ValueError(
+                f"request overruns the decode cache: prompt_len="
+                f"{prompt_len} + max_new={max_new} (prefill bucket "
+                f"{bucket}) requires cache_len >= {need}, got "
+                f"{scfg.cache_len}; raise --cache-len or shorten the "
+                f"request")
+
+    def submit(self, prompt: np.ndarray, max_new: int, bucket: int,
+               mode: str, now: float) -> Request:
+        self.validate(int(prompt.shape[0]), max_new, bucket, mode)
+        if len(self._q) >= self.scfg.queue_depth:
+            raise QueueFull(
+                f"queue at depth {self.scfg.queue_depth}; retry later")
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      bucket=bucket, mode=mode, submit_t=now)
+        self._next_rid += 1
+        self._q.append(req)
+        return req
+
+    def peek(self) -> Request | None:
+        return self._q[0] if self._q else None
+
+    def pop_batch(self, limit: int) -> list[Request]:
+        """Up to ``limit`` requests sharing the head request's bucket
+        (FIFO within the bucket — the oldest request decides which
+        uniform prefill composition fires next)."""
+        if not self._q or limit < 1:
+            return []
+        head = self._q[0]
+        out, keep = [], deque()
+        for r in self._q:
+            if len(out) < limit and (r.bucket, r.mode == "fresh") == \
+                    (head.bucket, head.mode == "fresh"):
+                out.append(r)
+            else:
+                keep.append(r)
+        self._q = keep
+        return out
+
+
+# --------------------------------------------------------------------------
+# slot bookkeeping (host mirror of the device counters)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SlotMeta:
+    req: Request
+    tail_len: int                   # teacher-forced steps before gen
+    gen0: int                       # tokens already produced at insert
+    steps: int = 0                  # decode steps since insert
+
+    @property
+    def generated(self) -> int:
+        # mirrors the device exactly: gen_idx advances iff the tail is
+        # exhausted, and the tail occupies the first tail_len steps
+        return self.gen0 + max(0, self.steps - self.tail_len)
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.req.max_new
+
+
+# --------------------------------------------------------------------------
+# the serving loop
+# --------------------------------------------------------------------------
+
+class ServingLoop:
+    """Continuous-batching serving driver (see module docstring).
+
+    Owns the request queue, the per-bucket prefill functions (backed by
+    a shared :class:`~repro.core.plan_cache.PlanCache`), the decode
+    slot pool with its device-resident state, and the latency stats.
+    ``run(prompts)`` drives an offline stream end-to-end;
+    ``submit``/``_refill``/``_dispatch_step`` are the building blocks
+    an online server would call.
+    """
+
+    def __init__(self, model: Model, params, mesh,
+                 pcfg: ParallelConfig, scfg: ServeConfig, *,
+                 plan_cache: pc.PlanCache | None = None,
+                 verbose: bool = False):
+        self.model, self.mesh = model, mesh
+        self.pcfg, self.scfg = pcfg, scfg
+        self.verbose = verbose
+        cfg = model.cfg
+        axis_sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+        # prefill frames shard over the same axes as training batches
+        # (sharding.batch_spec): pod x data
+        self.n_cp = (axis_sizes.get("pod", 1) * axis_sizes.get("data", 1))
+        self.tpw = int(scfg.prefill_tokens_per_worker)
+        self.budget = self.n_cp * self.tpw
+        self._uses_fcp = (scfg.prefill_impl == "fcp"
+                          and cfg.uses_attention and self.n_cp > 1)
+        if self._uses_fcp and axis_sizes.get("pod", 1) > 1:
+            raise ValueError(
+                "FCP prefill runs on 2-axis (data, model) meshes; pass "
+                "prefill_impl='dense' on pod meshes")
+        if self._uses_fcp and self.tpw % pcfg.block_size:
+            raise ValueError(
+                f"prefill_tokens_per_worker {self.tpw} must be a "
+                f"multiple of block_size {pcfg.block_size} for FCP "
+                f"prefill")
+        if scfg.prefill_impl not in ("fcp", "dense"):
+            raise ValueError(f"unknown prefill_impl "
+                             f"{scfg.prefill_impl!r}")
+        self.edges = pc.prefill_bucket_edges(scfg.bucket_min, self.budget)
+        self.queue = RequestQueue(scfg)
+        self.plan_cache = plan_cache or pc.PlanCache(pcfg.plan_cache_size)
+        self.stats = LatencyStats()
+        nh, nkv = cfg.padded_heads(1)
+        self._heads = (max(nh, 1), max(nkv, 1), max(cfg.head_dim, 1))
+        self._gen_cap = int(scfg.max_new_tokens)
+        self._tail_cap = int(scfg.cache_len)
+
+        # ---- decode side -------------------------------------------------
+        B = int(scfg.decode_slots)
+        decode_step, batch_axis, seq_axes = servelib.build_decode_step(
+            model, mesh, scfg.kind)
+        if batch_axis in axis_sizes and B % axis_sizes[batch_axis]:
+            raise ValueError(
+                f"decode_slots {B} must be a multiple of the "
+                f"{batch_axis!r} mesh axis ({axis_sizes[batch_axis]})")
+        self._psh = sh.param_shardings(params, mesh, mode="serve",
+                                       fsdp=False)
+        self.params = jax.device_put(params, self._psh)
+        cache0 = model.init_cache(B, scfg.cache_len)
+        self._csh = servelib.decode_cache_shardings(
+            cache0, mesh, batch_axis, seq_axes)
+        bsp = P(batch_axis)
+
+        def ssharding(v):
+            return NamedSharding(
+                mesh, bsp if v.ndim == 1 else P(batch_axis, None))
+        state0 = self._host_state(B)
+        self._ssh = {k: ssharding(v) for k, v in state0.items()}
+        self.cache = jax.device_put(cache0, self._csh)
+        self.state = jax.device_put(state0, self._ssh)
+        lsh = NamedSharding(
+            mesh, P(batch_axis,
+                    "model" if "model" in mesh.axis_names else None))
+        self._loop_step = jax.jit(
+            self._make_loop_step(decode_step, B),
+            in_shardings=(self._psh, self._ssh, self._csh),
+            out_shardings=(self._ssh, self._csh, lsh),
+            donate_argnums=(1, 2))
+        self._slots: list[_SlotMeta | None] = [None] * B
+        self._prefill_fns: dict = {}        # E -> (jit fn, ragged?)
+        self._insert_fns: dict = {}         # E -> jit fn
+        self._fresh_fn = jax.jit(self._make_fresh_insert(),
+                                 out_shardings=(self._csh, self._ssh),
+                                 donate_argnums=(0, 1))
+        self.last_logits = None             # decode logits (tests)
+        self.reset_counters()
+
+    # -- counters / introspection -----------------------------------------
+
+    def reset_counters(self) -> None:
+        self.stats = LatencyStats()
+        self.plan_cache.stats = pc.PlanCacheStats()
+        self.prefill_batches = 0
+        self.prefill_rows = 0
+        self.prefill_rows_real = 0
+        self.decode_steps = 0
+
+    def compile_counts(self) -> dict[str, int]:
+        """Per-jitted-function compile counts — after warmup every
+        entry must stay put (zero recompiles over the stream)."""
+        out = {"loop_step": int(self._loop_step._cache_size()),
+               "fresh_insert": int(self._fresh_fn._cache_size())}
+        for e, (fn, _) in self._prefill_fns.items():
+            out[f"prefill_{e}"] = int(fn._cache_size())
+        for e, fn in self._insert_fns.items():
+            out[f"insert_{e}"] = int(fn._cache_size())
+        return out
+
+    def n_active(self) -> int:
+        return sum(m is not None for m in self._slots)
+
+    # -- admission ---------------------------------------------------------
+
+    def bucket_of(self, prompt_len: int) -> tuple[int, str]:
+        """(bucket edge E, mode) for a prompt.
+
+        Attention families pad UP to the smallest covering edge (exact
+        under the causal mask; one prefill call, no tail).  When the
+        prompt exceeds the prefill budget, or for recurrent families
+        always, the prompt chunks DOWN: the largest edge <= prompt_len
+        prefills in one call and the remainder teacher-forces through
+        the decode loop on device ("chunked prefill").  Prompts below
+        the smallest edge on the chunk path skip prefill ("fresh")."""
+        L = int(prompt_len)
+        if self.model.cfg.family not in RECURRENT:
+            for e in self.edges:
+                if L <= e:
+                    return e, "pad"
+            return self.edges[-1], "chunk"
+        down = 0
+        for e in self.edges:
+            if e <= L:
+                down = e
+        return (down, "chunk") if down else (0, "fresh")
+
+    def submit(self, prompt, max_new: int | None = None) -> Request:
+        prompt = np.asarray(prompt, np.int32).ravel()
+        max_new = int(max_new if max_new is not None
+                      else self.scfg.max_new_tokens)
+        bucket, mode = self.bucket_of(prompt.shape[0])
+        return self.queue.submit(prompt, max_new, bucket, mode,
+                                 now=time.perf_counter())
+
+    # -- device programs ---------------------------------------------------
+
+    def _host_state(self, B: int) -> dict:
+        i32 = jnp.int32
+
+        def z(*s):
+            return jnp.zeros(s, i32)
+        return {
+            "tok": z(B), "pos": z(B),
+            "active": jnp.zeros((B,), bool),
+            "tail_buf": z(B, self._tail_cap),
+            "tail_idx": z(B), "tail_len": z(B),
+            "gen_buf": z(B, self._gen_cap),
+            "gen_idx": z(B),
+            "max_new": jnp.ones((B,), i32),
+        }
+
+    def _make_loop_step(self, decode_step, B: int):
+        gen_cap, tail_cap = self._gen_cap, self._tail_cap
+
+        def loop_step(params, state, cache):
+            nxt, logits, cache = decode_step(
+                params, state["tok"], state["pos"], cache)
+            nxt = nxt.astype(jnp.int32)
+            b = jnp.arange(B)
+            act = state["active"]
+            in_tail = state["tail_idx"] < state["tail_len"]
+            ti = jnp.minimum(state["tail_idx"], tail_cap - 1)
+            gi = jnp.minimum(state["gen_idx"], gen_cap - 1)
+            # a slot in its tail feeds the next prompt token and drops
+            # the prediction; past the tail the prediction is the next
+            # generated token and feeds back as the next input
+            new_tok = jnp.where(in_tail, state["tail_buf"][b, ti], nxt)
+            record = act & ~in_tail
+            gen_buf = state["gen_buf"].at[b, gi].set(
+                jnp.where(record, nxt, state["gen_buf"][b, gi]))
+            gen_idx = state["gen_idx"] + record.astype(jnp.int32)
+            state = {
+                "tok": jnp.where(act, new_tok, state["tok"]),
+                "pos": state["pos"] + act.astype(jnp.int32),
+                # self-freezing: a finished slot stops moving entirely
+                "active": act & (gen_idx < state["max_new"]),
+                "tail_buf": state["tail_buf"],
+                "tail_idx": state["tail_idx"]
+                + (act & in_tail).astype(jnp.int32),
+                "tail_len": state["tail_len"],
+                "gen_buf": gen_buf,
+                "gen_idx": gen_idx,
+                "max_new": state["max_new"],
+            }
+            return state, cache, logits
+
+        return loop_step
+
+    @staticmethod
+    def _row_write(cache: dict, slot, rows: dict) -> dict:
+        """Write per-slot rows (``[G, E, ...]``) into the batch dim of
+        every cache leaf via ``dynamic_update_slice`` — the slot index
+        stays traced, so refills never recompile."""
+        out = {}
+        for k, c in cache.items():
+            r = rows[k][:, None].astype(c.dtype)
+            out[k] = jax.lax.dynamic_update_slice(
+                c, r, (0, slot) + (0,) * (c.ndim - 2))
+        return out
+
+    def _state_insert(self, state, slot, tok0, pos0, gen0, first_gen,
+                      tail_row, tail_len, max_new):
+        i32 = jnp.int32
+        gen_row = jnp.zeros((self._gen_cap,), i32).at[0].set(first_gen)
+        return {
+            "tok": state["tok"].at[slot].set(tok0),
+            "pos": state["pos"].at[slot].set(pos0),
+            "active": state["active"].at[slot].set(gen0 < max_new),
+            "tail_buf": jax.lax.dynamic_update_slice(
+                state["tail_buf"], tail_row[None].astype(i32), (slot, 0)),
+            "tail_idx": state["tail_idx"].at[slot].set(0),
+            "tail_len": state["tail_len"].at[slot].set(tail_len),
+            "gen_buf": jax.lax.dynamic_update_slice(
+                state["gen_buf"], gen_row[None], (slot, 0)),
+            "gen_idx": state["gen_idx"].at[slot].set(gen0),
+            "max_new": state["max_new"].at[slot].set(max_new),
+        }
+
+    def _make_insert(self):
+        def insert(cache, state, pcache, plogits, i, slot, pos0,
+                   first_tail, has_tail, tail_row, tail_len, max_new):
+            i32 = jnp.int32
+            rows = {k: jax.lax.dynamic_index_in_dim(
+                v, i, axis=1, keepdims=False) for k, v in pcache.items()}
+            cache = self._row_write(cache, slot, rows)
+            # first generated token: argmax of the prefill's last-token
+            # logits — computed on device, never synced to host
+            t1 = jnp.argmax(plogits[i]).astype(i32)
+            tok0 = jnp.where(has_tail, first_tail, t1)
+            gen0 = jnp.where(has_tail, 0, 1).astype(i32)
+            state = self._state_insert(
+                state, slot, tok0, pos0, gen0,
+                jnp.where(has_tail, 0, t1), tail_row, tail_len, max_new)
+            return cache, state
+
+        return insert
+
+    def _make_fresh_insert(self):
+        def fresh(cache, state, slot, first_tok, tail_row, tail_len,
+                  max_new):
+            rows = {k: jnp.zeros((c.shape[0],) + c.shape[2:], c.dtype)
+                    for k, c in cache.items()}
+            cache = self._row_write(cache, slot, rows)
+            state = self._state_insert(
+                state, slot, first_tok, jnp.int32(0), jnp.int32(0),
+                jnp.int32(0), tail_row, tail_len, max_new)
+            return cache, state
+
+        return fresh
+
+    # -- prefill -----------------------------------------------------------
+
+    def _schedule_for(self, E: int):
+        """Plan-cache-backed FCP schedule for bucket ``E`` — looked up
+        on EVERY prefill batch, so the cache stats prove the reuse."""
+        pcfg = self.pcfg
+        key = pc.prefill_plan_key(
+            E, self.budget, self.n_cp, pcfg.block_size, mask=True,
+            coalesce=pcfg.coalesce, locality=pcfg.locality,
+            wire=pcfg.comm_dtype, in_dtype_bytes=pcfg.in_dtype_bytes,
+            overlap=pcfg.overlap, extra=self._heads)
+        comp = list(pc.prefill_composition(E, self.budget))
+        return self.plan_cache.get_or_build(
+            key, lambda: trainlib.build_schedule(
+                self.model.cfg, pcfg, comp, self.n_cp, self.tpw,
+                mask=True))
+
+    def _prefill_fn(self, E: int):
+        if E in self._prefill_fns:
+            if self._uses_fcp:
+                self._schedule_for(E)      # per-batch key reuse (stats)
+            return self._prefill_fns[E]
+        cfg = self.model.cfg
+        Pn = self.budget // E
+        if self._uses_fcp:
+            attn = trainlib.make_fcp_attn_fn(self._schedule_for(E),
+                                             self.mesh, self.pcfg)
+        elif cfg.uses_attention:
+            seq = np.repeat(np.arange(Pn, dtype=np.int32), E)
+            posf = np.tile(np.arange(E, dtype=np.int32), Pn)
+            shape = (self.n_cp, self.tpw)
+            attn = dense_attn_fn(jnp.asarray(seq.reshape(shape)),
+                                 jnp.asarray(posf.reshape(shape)),
+                                 mask=True)
+        else:
+            attn = None
+        ragged = cfg.family not in RECURRENT
+        fn = servelib.build_prefill_step(
+            self.model, self.mesh, attn, batch_size=Pn, seq_len=E,
+            ragged=ragged)
+        batch_like = {
+            "tokens": jnp.zeros((self.n_cp, self.tpw), jnp.int32),
+            "positions": jnp.zeros((self.n_cp, self.tpw), jnp.int32)}
+        bsh = sh.batch_shardings(batch_like, self.mesh)
+        ish = (self._psh, bsh) + (
+            (NamedSharding(self.mesh, P()),) if ragged else ())
+        jfn = jax.jit(fn, in_shardings=ish)
+        self._prefill_fns[E] = (jfn, ragged)
+        return self._prefill_fns[E]
+
+    def _insert_fn(self, E: int):
+        if E not in self._insert_fns:
+            self._insert_fns[E] = jax.jit(
+                self._make_insert(),
+                out_shardings=(self._csh, self._ssh),
+                donate_argnums=(0, 1))
+        return self._insert_fns[E]
+
+    def _assemble(self, E: int, reqs: list[Request]):
+        Pn = self.budget // E
+        toks = np.zeros((Pn, E), np.int32)
+        last = np.zeros((Pn,), np.int32)
+        for i, r in enumerate(reqs):
+            L = r.prompt_len
+            if r.mode == "pad":
+                toks[i, :L] = r.prompt
+                last[i] = L - 1
+            else:                          # chunk: first E tokens
+                toks[i] = r.prompt[:E]
+                last[i] = E - 1
+        posf = np.tile(np.arange(E, dtype=np.int32), Pn)
+        shape = (self.n_cp, self.tpw)      # stream is sequence-major
+        return (jnp.asarray(toks.reshape(shape)),
+                jnp.asarray(posf.reshape(shape)), jnp.asarray(last))
+
+    def _tail_arrays(self, req: Request, E: int):
+        """(pos0, first_tail, has_tail, tail_row, tail_len) host-side."""
+        L = req.prompt_len
+        tail_row = np.zeros((self._tail_cap,), np.int32)
+        if req.mode == "pad":
+            return L, 0, False, tail_row, 0
+        has_tail = L > E
+        first_tail = int(req.prompt[E]) if has_tail else 0
+        tail = req.prompt[E + 1:L]
+        tail_row[:tail.shape[0]] = tail
+        return E, first_tail, has_tail, tail_row, int(tail.shape[0])
+
+    def _prefill_and_insert(self, reqs: list[Request],
+                            free: list[int]) -> None:
+        now = time.perf_counter()
+        E = reqs[0].bucket
+        if reqs[0].mode == "fresh":        # below the smallest edge:
+            for req, slot in zip(reqs, free):   # no prefill chunk
+                tail_row = np.zeros((self._tail_cap,), np.int32)
+                tail = req.prompt[1:]
+                tail_row[:tail.shape[0]] = tail
+                self.cache, self.state = self._fresh_fn(
+                    self.cache, self.state, jnp.int32(slot),
+                    jnp.int32(int(req.prompt[0])), jnp.asarray(tail_row),
+                    jnp.int32(tail.shape[0]), jnp.int32(req.max_new))
+                req.queue_ms = (now - req.submit_t) * 1e3
+                req.insert_t = now
+                self._slots[slot] = _SlotMeta(
+                    req, tail_len=int(tail.shape[0]), gen0=0)
+            return
+        jfn, ragged = self._prefill_fn(E)
+        tokens, positions, last = self._assemble(E, reqs)
+        batch = {"tokens": tokens, "positions": positions}
+        t0 = time.perf_counter()
+        if ragged:
+            plogits, pcache = jfn(self.params, batch, last)
+        else:
+            plogits, pcache = jfn(self.params, batch)
+        jax.block_until_ready(plogits)     # one sync per BATCH (timing)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.prefill_batches += 1
+        self.prefill_rows += self.budget // E
+        self.prefill_rows_real += len(reqs)
+        ins = self._insert_fn(E)
+        for i, (req, slot) in enumerate(zip(reqs, free)):
+            pos0, ft, ht, tail_row, tl = self._tail_arrays(req, E)
+            self.cache, self.state = ins(
+                self.cache, self.state, pcache, plogits, jnp.int32(i),
+                jnp.int32(slot), jnp.int32(pos0), jnp.int32(ft),
+                jnp.asarray(ht), jnp.asarray(tail_row), jnp.int32(tl),
+                jnp.int32(req.max_new))
+            req.queue_ms = (t0 - req.submit_t) * 1e3
+            req.prefill_ms = dt_ms
+            req.insert_t = time.perf_counter()
+            # device truth: gen advances iff tail_idx >= tail_len at
+            # the step, i.e. exactly after tl tail steps; gen0 = 1 on
+            # the no-tail paths (argmax of the prefill logits)
+            self._slots[slot] = _SlotMeta(
+                req, tail_len=tl, gen0=0 if ht else 1)
+
+    # -- scheduling rounds -------------------------------------------------
+
+    def _refill(self) -> None:
+        free = [i for i, m in enumerate(self._slots) if m is None]
+        while free and len(self.queue):
+            head = self.queue.peek()
+            cap = len(free)
+            if head.mode != "fresh":       # one prefill batch has
+                cap = min(cap, self.budget // head.bucket)  # P rows
+            reqs = self.queue.pop_batch(limit=cap)
+            if not reqs:
+                break
+            take = free[:len(reqs)]
+            free = free[len(reqs):]
+            self._prefill_and_insert(reqs, take)
+
+    def _dispatch_step(self) -> None:
+        self.state, self.cache, self.last_logits = self._loop_step(
+            self.params, self.state, self.cache)
+        self.decode_steps += 1
+        for m in self._slots:
+            if m is not None and not m.done:
+                m.steps += 1
+
+    def _collect_finished(self) -> list[Request]:
+        done = []
+        if not any(m is not None and m.done for m in self._slots):
+            return done
+        # one transfer for every completion in this round — the only
+        # device->host sync in the decode loop
+        gen = np.asarray(self.state["gen_buf"])
+        for slot, m in enumerate(self._slots):
+            if m is None or not m.done:
+                continue
+            req = m.req
+            req.tokens = gen[slot, :req.max_new].copy()
+            req.finish_t = time.perf_counter()
+            req.decode_ms = (req.finish_t - req.insert_t) * 1e3
+            req.total_ms = (req.finish_t - req.submit_t) * 1e3
+            self.stats.add(req)
+            done.append(req)
+            self._slots[slot] = None
+        return done
+
+    # -- driver ------------------------------------------------------------
+
+    def warmup(self) -> dict[str, int]:
+        """Compile every steady-state program up front: one filler
+        request per admissible prefill bucket (plus the below-minimum
+        "fresh" path for recurrent families) with enough generation to
+        exercise the decode loop, then reset the counters.  Returns the
+        compile-count baseline — over the measured stream every count
+        must stay put (zero recompiles after warmup)."""
+        mn = min(2, self.scfg.max_new_tokens)
+        prompts = []
+        for e in self.edges:
+            L = min(e, self.scfg.cache_len - mn)
+            if L >= 1 and self.bucket_of(L)[0] == e:
+                prompts.append(np.ones((L,), np.int32))
+        if self.model.cfg.family in RECURRENT and self.edges[0] > 1:
+            prompts.append(np.ones((1,), np.int32))   # fresh path
+        self.run(prompts, max_new=mn)
+        base = self.compile_counts()
+        self.reset_counters()
+        return base
+
+    def run(self, prompts: Sequence, max_new: int | None = None) -> dict:
+        """Serve an offline stream of prompts end-to-end and return the
+        report.  Admission respects ``queue_depth`` (backpressure);
+        free slots refill every scheduling round; the loop ends when
+        every request has finished."""
+        pending = deque(prompts)
+        t_run = time.perf_counter()
+        served = 0
+        while pending or len(self.queue) or self.n_active():
+            while pending and len(self.queue) < self.scfg.queue_depth:
+                self.submit(pending.popleft(), max_new)
+            self._refill()
+            served += len(self._collect_finished())
+            if any(m is not None and not m.done for m in self._slots):
+                self._dispatch_step()
+                served += len(self._collect_finished())
+        wall = time.perf_counter() - t_run
+        return self.report(wall)
+
+    def report(self, wall_s: float) -> dict:
+        s = self.stats.summary()
+        toks = s["generated_tokens"]
+        out = {
+            "wall_s": wall_s,
+            "sustained_tok_s": toks / wall_s if wall_s > 0 else 0.0,
+            "decode_steps": self.decode_steps,
+            "prefill_batches": self.prefill_batches,
+            "prefill_fill": (self.prefill_rows_real
+                             / max(self.prefill_rows, 1)),
+            "bucket_edges": list(self.edges),
+            "prefill_impl": ("fcp" if self._uses_fcp else "dense"),
+            **s,
+        }
+        if self._uses_fcp:
+            out["plan_cache"] = self.plan_cache.stats.to_dict()
+        return out

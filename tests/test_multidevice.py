@@ -92,6 +92,14 @@ def test_cp_decode_multidevice():
     assert "ALL MULTIDEVICE DECODE CASES PASSED" in out
 
 
+def test_serving_multidevice():
+    # continuous-batching FCP serving: zero recompiles after warmup,
+    # plan-cache hit on every prefill batch, one prefill call per
+    # prompt, fcp == dense tokens
+    out = _run("run_serve.py")
+    assert "ALL MULTIDEVICE SERVING CASES PASSED" in out
+
+
 @pytest.mark.slow
 def test_plan_cache_executor_multidevice():
     # amortized planning: cached-vs-uncached executor equivalence

@@ -1,0 +1,207 @@
+"""Continuous-batching serving loop (single device, CPU).
+
+The load-bearing claims:
+
+* every family (transformer / ssm / hybrid) generates token-for-token
+  what the dense teacher-forced reference generates — the bucketed
+  prefill (pad-up + ragged gather, or chunk-down + on-device tail) is
+  exact, not approximate;
+* prefill logits match the teacher-forced decode loop's last-prompt
+  logits to <= 1e-6 (normalized);
+* every transformer prompt goes through exactly ONE prefill call (no
+  teacher-forced tail) — the bug this PR fixes;
+* cache overruns are rejected at admission with the required length
+  (previously: a silent masked-write drop);
+* queue depth and generation caps are enforced;
+* the prefill bucket helpers tile the budget exactly.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ParallelConfig, ServeConfig,
+                                smoke_config)
+from repro.core import plan_cache as pc
+from repro.launch import serve as servelib
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+from repro.runtime.serving import QueueFull, ServingLoop
+
+FAMILIES = [("stablelm_1_6b", "transformer"), ("mamba2_130m", "ssm"),
+            ("zamba2_2_7b", "hybrid")]
+
+SCFG = ServeConfig(cache_len=160, decode_slots=2, queue_depth=8,
+                   max_new_tokens=8, prefill_tokens_per_worker=128,
+                   bucket_min=16)
+
+
+def _setup(arch):
+    cfg = dataclasses.replace(smoke_config(arch), param_dtype="float32")
+    model = Model(cfg, tp=1)
+    params = model.init(jax.random.key(0))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    loop = ServingLoop(model, params, mesh, ParallelConfig(block_size=16),
+                       SCFG)
+    return cfg, model, params, mesh, loop
+
+
+def _reference(model, params, mesh, prompt, max_new, cache_len,
+               want_logits_at=None):
+    """Dense teacher-forced decode loop (the pre-fix serve path): feed
+    the prompt token by token, then generate greedily."""
+    cache = model.init_cache(1, cache_len)
+    step, ba, sa = servelib.build_decode_step(model, mesh, "decode")
+    step = servelib.jit_decode_step(step, mesh, params, cache, 1, ba, sa)
+    toks = np.asarray(prompt[:1], np.int32)
+    out, logits_at = [], None
+    for i in range(len(prompt) + max_new - 1):
+        nxt, logits, cache = step(params, jnp.asarray(toks),
+                                  jnp.full((1,), i, jnp.int32), cache)
+        if want_logits_at == i:
+            logits_at = np.asarray(logits[0], np.float32)
+        if i + 1 < len(prompt):
+            toks = prompt[i + 1:i + 2]
+        else:
+            toks = np.asarray(nxt)
+            out.append(int(toks[0]))
+    return out, logits_at
+
+
+# --------------------------------------------------------------------------
+# bucket helpers
+# --------------------------------------------------------------------------
+
+def test_prefill_bucket_edges_divide_budget():
+    edges = pc.prefill_bucket_edges(16, 128)
+    assert edges == [16, 32, 64, 128]
+    for e in edges:
+        assert 128 % e == 0
+    with pytest.raises(ValueError):
+        pc.prefill_bucket_edges(0, 128)
+
+
+def test_prefill_composition_tiles_budget():
+    assert pc.prefill_composition(32, 128) == (32,) * 4
+    assert sum(pc.prefill_composition(16, 128)) == 128
+    with pytest.raises(ValueError):
+        pc.prefill_composition(48, 128)        # not a divisor
+
+
+def test_prefill_plan_key_matches_train_key():
+    # serving prefill keys are plain plan_key over the uniform
+    # composition — a training batch with the same canonical layout
+    # shares the cache entry
+    k1 = pc.prefill_plan_key(32, 128, 4, 16, extra=(8, 8, 64))
+    k2 = pc.plan_key((32,) * 4, 4, 32, 16, extra=(8, 8, 64))
+    assert k1 == k2
+
+
+# --------------------------------------------------------------------------
+# exactness: serving loop vs teacher-forced dense reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,family", FAMILIES)
+def test_serving_matches_teacher_forced_reference(arch, family):
+    cfg, model, params, mesh, loop = _setup(arch)
+    rng = np.random.default_rng(3)
+    # below bucket_min, straddling an edge, exactly an edge, max bucket
+    lens = [5, 23, 64, 128]
+    prompts = [rng.integers(1, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in lens]
+    loop.run(prompts, max_new=6)
+    assert len(loop.stats.finished) == len(prompts)
+    for r in sorted(loop.stats.finished, key=lambda r: r.rid):
+        ref, _ = _reference(model, params, mesh, r.prompt, r.max_new,
+                            SCFG.cache_len)
+        assert list(map(int, r.tokens)) == ref, \
+            f"L={r.prompt_len} mode={r.mode}"
+
+
+@pytest.mark.parametrize("arch,family", FAMILIES)
+def test_prefill_logits_match_reference(arch, family):
+    """The prefill call's last-prompt logits == the teacher-forced
+    loop's logits at the same step, <= 1e-6 normalized."""
+    cfg, model, params, mesh, loop = _setup(arch)
+    rng = np.random.default_rng(4)
+    L = 61 if family == "transformer" else 64   # ragged vs chunk-exact
+    prompt = rng.integers(1, cfg.vocab_size, (L,)).astype(np.int32)
+    req = loop.submit(prompt, max_new=2)
+    E = req.bucket
+    jfn, ragged = loop._prefill_fn(E)
+    tokens, positions, last = loop._assemble(E, [req])
+    batch = {"tokens": tokens, "positions": positions}
+    lg = (jfn(loop.params, batch, last) if ragged
+          else jfn(loop.params, batch))[0]
+    got = np.asarray(lg[0], np.float32)
+    _, ref = _reference(model, params, mesh, prompt, 2, SCFG.cache_len,
+                        want_logits_at=L - 1)
+    scale = max(1.0, float(np.abs(ref).max()))
+    # the attention gather is bit-comparable; recurrent prefill scans
+    # in a different order than step-by-step decode (fp noise only —
+    # the generated tokens match exactly, see the test above)
+    tol = 1e-6 if family == "transformer" else 1e-5
+    assert np.abs(got - ref).max() / scale <= tol
+
+
+def test_transformer_prompts_take_one_prefill_call():
+    """The fixed serve path: every transformer prompt rides exactly one
+    FCP/dense prefill call — zero teacher-forced prompt tokens."""
+    cfg, model, params, mesh, loop = _setup("stablelm_1_6b")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab_size, (int(L),)).astype(np.int32)
+               for L in rng.integers(1, 129, (6,))]
+    loop.run(prompts, max_new=4)
+    assert len(loop.stats.finished) == 6
+    for r in loop.stats.finished:
+        assert r.mode == "pad" and r.tail_tokens == 0
+    # and the prompt tokens never went through the decode loop:
+    # steps == tails (0) + generated tokens still pending per slot
+    assert loop.decode_steps < sum(len(p) for p in prompts)
+
+
+# --------------------------------------------------------------------------
+# admission control
+# --------------------------------------------------------------------------
+
+def test_cache_overrun_rejected_with_required_length():
+    _, _, _, _, loop = _setup("stablelm_1_6b")
+    long = np.ones((SCFG.cache_len - 2,), np.int32)
+    with pytest.raises(ValueError, match=r"cache_len >= \d+"):
+        loop.submit(long, max_new=8)
+    # the same request fits once max_new shrinks to the gap
+    loop.submit(np.ones((SCFG.cache_len - 8,), np.int32), max_new=8)
+
+
+def test_max_new_and_queue_depth_enforced():
+    _, _, _, _, loop = _setup("stablelm_1_6b")
+    with pytest.raises(ValueError, match="max_new"):
+        loop.submit(np.ones((4,), np.int32),
+                    max_new=SCFG.max_new_tokens + 1)
+    with pytest.raises(ValueError):
+        loop.submit(np.ones((0,), np.int32), max_new=1)
+    for _ in range(SCFG.queue_depth):
+        loop.submit(np.ones((4,), np.int32), max_new=1)
+    with pytest.raises(QueueFull):
+        loop.submit(np.ones((4,), np.int32), max_new=1)
+
+
+def test_dense_escape_hatch_matches_fcp_config():
+    """--prefill-impl dense must produce the same tokens (on one
+    device fcp falls back to dense internally, so force the flag)."""
+    cfg, model, params, mesh, _ = _setup("stablelm_1_6b")
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (9, 40)]
+    outs = []
+    for impl in ("fcp", "dense"):
+        loop = ServingLoop(model, params, mesh,
+                           ParallelConfig(block_size=16),
+                           SCFG.replace(prefill_impl=impl))
+        loop.run(prompts, max_new=4)
+        outs.append({r.rid: list(map(int, r.tokens))
+                     for r in loop.stats.finished})
+    assert outs[0] == outs[1]
