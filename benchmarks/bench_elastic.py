@@ -15,6 +15,16 @@ devices and records the ISSUE 7 acceptance metrics:
   modeled post-demotion step-time ratio (demoted vs uniform placement,
   both evaluated under the real 2x skew via the cost model — CPU-only
   container, see DESIGN.md §7 "Measurement honesty").
+* ``pod_kill`` / ``rejoin`` — pod 1 of a 2-pod fleet goes silent
+  mid-step (ISSUE 10).  ``pod_kill`` records the same restore/replay
+  contracts as ``kill`` at the pod failure-domain granularity (the
+  survivor pod replays against an uninterrupted survivor-fleet
+  reference restored from the same checkpoint).  ``rejoin`` records
+  the step-boundary cost of the pod coming back: rejoin wall clock,
+  and — the overlapping-recovery contract — zero plan-cache misses
+  and zero recompiles after the rejoin, because the background
+  prewarm thread already re-minted every full-fleet plan key while
+  the survivors kept training.
 * ``healthy`` — no faults, no skew.  Records the plan-cache hit rate,
   executor recompiles after warmup (must be zero: the monitor's
   planning speeds stay ``None`` while healthy so plan keys are
@@ -64,6 +74,11 @@ CKPT_EVERY = 2
 FAIL_STEP, FAIL_WORKER = 7, 1
 TOTAL = 12
 
+# pod drill geometry: 2 pods x 2 workers on the same 8 host devices,
+# kill pod 1 mid-step, rejoin it 4 steps later at a step boundary
+P0, POD_WORKERS, POD_TPW = 2, 2, 256
+POD_FAIL_STEP, POD_REJOIN = 5, 9
+
 
 def _cfg():
     return smoke_config("stablelm_1_6b").replace(param_dtype="float32")
@@ -81,6 +96,9 @@ def _pcfg(**kw):
 def _sup(pcfg, ckpt_dir, total=TOTAL, **kw):
     tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=total)
     kw.setdefault("dist", "real_world")
+    # keep every checkpoint: the reference run restores from a pruned
+    # copy of the directory, so step_{resume-1} must survive GC
+    kw.setdefault("checkpoint_keep", 8)
     return Supervisor(_cfg(), pcfg, tcfg, n_workers=N0,
                       tokens_per_worker=TPW0, checkpoint_dir=ckpt_dir,
                       verbose=False, **kw)
@@ -136,6 +154,73 @@ def kill_bench(tmp: pathlib.Path) -> dict:
     assert (out["post_recovery_max_loss_diff"]
             <= ELASTIC_LIMITS["post_recovery_max_loss_diff"]), out
     return out
+
+
+def _pod_sup(pcfg, ckpt_dir, start_fleet=None):
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=TOTAL,
+                       grad_compression=True)
+    # checkpoint_keep wide enough that step_{resume-1} survives GC to
+    # the end of the run (the reference restores from a pruned copy)
+    return Supervisor(_cfg(), pcfg, tcfg, n_workers=POD_WORKERS,
+                      tokens_per_worker=POD_TPW, pods=P0,
+                      dist="real_world", checkpoint_dir=ckpt_dir,
+                      checkpoint_keep=8, verbose=False,
+                      start_fleet=start_fleet)
+
+
+def pod_bench(tmp: pathlib.Path) -> tuple[dict, dict]:
+    d = tmp / "pod_primary"
+    sup = _pod_sup(_pcfg(), d)
+    fail = elastic.InjectedFailure(pod=1, step=POD_FAIL_STEP, round=2)
+    sup.run(TOTAL, fail=fail, rejoin_step=POD_REJOIN)
+    rec = sup.recoveries[0]
+    rj = sup.rejoins[0]
+
+    # reference: uninterrupted survivor-fleet run restored from the
+    # same checkpoint, rejoining at the same step boundary
+    d2 = tmp / "pod_reference"
+    shutil.copytree(d, d2)
+    for p in d2.iterdir():
+        if (p.name.startswith("step_") and not p.name.endswith(".tmp")
+                and int(p.name.split("_")[1]) > rec["resume_step"] - 1):
+            shutil.rmtree(p)
+    ref = _pod_sup(_pcfg(), d2, start_fleet=(1, POD_WORKERS))
+    ref.run(TOTAL, rejoin_step=POD_REJOIN)
+    want = {(r.step, r.pods): r for r in ref.history}
+    diffs = [0.0]
+    for r in sup.history:
+        w = want.get((r.step, r.pods))
+        if w is None:
+            continue
+        diffs.append(abs(r.loss - w.loss) / max(abs(w.loss), 1e-9))
+        diffs.append(abs(r.gnorm - w.gnorm) / max(abs(w.gnorm), 1e-9))
+
+    s = sup.plan_cache.stats
+    kill = {
+        "failed_pod": rec["pod"],
+        "failed_step": rec["failed_step"],
+        "resume_step": rec["resume_step"],
+        "steps_lost": rec["steps_lost"],
+        "restore_ms": rec["wall_s"] * 1e3,
+        "post_recovery_max_loss_diff": float(max(diffs)),
+    }
+    rejoin = {
+        "step": rj["step"],
+        "rejoin_ms": rj["rejoin_ms"],
+        "plan_misses": s.misses - rj["plan_misses_before"],
+        "recompiles": len(sup.compiled_at) - rj["compiles_before"],
+        "plan_keys_cached": rj["plan_keys_cached"],
+        "prewarm": rj["prewarm"],
+    }
+    assert kill["steps_lost"] <= ELASTIC_LIMITS["pod_steps_lost"], kill
+    assert (kill["post_recovery_max_loss_diff"]
+            <= ELASTIC_LIMITS["pod_post_recovery_max_loss_diff"]), kill
+    assert rejoin["plan_keys_cached"] is True, rejoin
+    assert (rejoin["plan_misses"]
+            <= ELASTIC_LIMITS["rejoin_plan_misses"]), rejoin
+    assert (rejoin["recompiles"]
+            <= ELASTIC_LIMITS["rejoin_recompiles"]), rejoin
+    return kill, rejoin
 
 
 def straggler_bench() -> dict:
@@ -228,6 +313,10 @@ def main(argv=None):
             "block_size": BS, "checkpoint_every": CKPT_EVERY,
             "fail_step": FAIL_STEP, "fail_worker": FAIL_WORKER,
             "total_steps": TOTAL, "healthy_steps": args.healthy_steps,
+            "pods": P0, "pod_workers": POD_WORKERS,
+            "pod_tokens_per_worker": POD_TPW,
+            "pod_fail_step": POD_FAIL_STEP,
+            "pod_rejoin_step": POD_REJOIN,
         },
         "limits": dict(ELASTIC_LIMITS),
     }
@@ -239,6 +328,16 @@ def main(argv=None):
         print(f"  lost {k['steps_lost']} step(s), restore "
               f"{k['restore_ms']:.1f} ms, replay diff "
               f"{k['post_recovery_max_loss_diff']:.2e}", flush=True)
+        print("pod_kill: pod loss -> overlapped recovery -> rejoin...",
+              flush=True)
+        result["pod_kill"], result["rejoin"] = pod_bench(tmp)
+        pk, rj = result["pod_kill"], result["rejoin"]
+        print(f"  lost {pk['steps_lost']} step(s), restore "
+              f"{pk['restore_ms']:.1f} ms, replay diff "
+              f"{pk['post_recovery_max_loss_diff']:.2e}", flush=True)
+        print(f"  rejoin at step {rj['step']}: {rj['rejoin_ms']:.1f} ms, "
+              f"{rj['plan_misses']} plan miss(es), "
+              f"{rj['recompiles']} recompile(s)", flush=True)
         print("straggler: 2x-slow worker -> demotion...", flush=True)
         result["straggler"] = straggler_bench()
         st = result["straggler"]

@@ -76,6 +76,18 @@ ELASTIC_LIMITS = {
     # hit rate stays at the amortized-planning contract level
     "healthy_hit_rate": 0.9,
     "healthy_recompiles_after_warmup": 0.0,
+    # pod-level failure domains (ISSUE 10): losing a whole pod loses no
+    # more steps than a single-worker loss, and the survivor replay must
+    # match an uninterrupted survivor-fleet run bit-for-bit (normalized
+    # loss diff)
+    "pod_steps_lost": 2.0,
+    "pod_post_recovery_max_loss_diff": 1e-6,
+    # overlapping recovery: by rejoin time the background prewarm has
+    # already minted every full-fleet plan key and the step cache still
+    # holds the full-fleet programs, so rejoining is plan-miss-free and
+    # recompile-free
+    "rejoin_plan_misses": 0.0,
+    "rejoin_recompiles": 0.0,
 }
 
 
@@ -167,6 +179,22 @@ GATES: dict[str, list[Gate]] = {
              limit=ELASTIC_LIMITS["healthy_hit_rate"]),
         Gate("healthy.recompiles_after_warmup", lower_is_better=True,
              limit=ELASTIC_LIMITS["healthy_recompiles_after_warmup"]),
+        # whole-pod loss: same absolute contracts as a worker loss, at
+        # the pod failure-domain granularity
+        Gate("pod_kill.restore_ms", lower_is_better=True, normalize=True,
+             rel_tol=0.5),      # ms-scale host work: generous tol
+        Gate("pod_kill.steps_lost", lower_is_better=True,
+             limit=ELASTIC_LIMITS["pod_steps_lost"]),
+        Gate("pod_kill.post_recovery_max_loss_diff", lower_is_better=True,
+             limit=ELASTIC_LIMITS["pod_post_recovery_max_loss_diff"]),
+        # overlapping recovery: rejoin wall clock is baseline-relative;
+        # plan-miss-free / recompile-free rejoin are absolute contracts
+        Gate("rejoin.rejoin_ms", lower_is_better=True, normalize=True,
+             rel_tol=0.5),
+        Gate("rejoin.plan_misses", lower_is_better=True,
+             limit=ELASTIC_LIMITS["rejoin_plan_misses"]),
+        Gate("rejoin.recompiles", lower_is_better=True,
+             limit=ELASTIC_LIMITS["rejoin_recompiles"]),
     ],
     "BENCH_planner.json": [
         Gate("steady_state.plan_cold_ms_median", lower_is_better=True,

@@ -5,7 +5,7 @@
 #   scripts/ci.sh verify       # repo lints + plan-fuzzing harness
 #   scripts/ci.sh test         # fast tier-1 suite + benches + regression gate
 #   scripts/ci.sh multidevice  # slow 8-host-device subprocess suites
-#   scripts/ci.sh fault-drill  # worker-loss/straggler drill + elastic bench
+#   scripts/ci.sh fault-drill  # worker/pod-loss + straggler drills + elastic bench
 #   scripts/ci.sh all          # everything, in CI job order
 #
 # Set SKIP_INSTALL=1 to reuse the current environment as-is.
@@ -45,8 +45,9 @@ run_verify() {
         python -m repro.analysis.lints
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m repro.verify --fuzz --plans 200 --seed 0
-    # survivor-set replan fuzzing: kill each worker, verify the
-    # survivor schedule, regrow and assert the plan cache re-hits
+    # survivor-set replan fuzzing: kill each worker AND each whole
+    # pod, verify every survivor schedule, regrow and assert the plan
+    # cache re-hits (CI adds a rolling-seed pass via GITHUB_RUN_NUMBER)
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m repro.verify --fuzz-elastic --plans 50 --seed 0
 }

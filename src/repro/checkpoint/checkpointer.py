@@ -12,6 +12,14 @@ Layout of one checkpoint:
 Restore only trusts directories with a COMMIT marker, so a preemption
 mid-write can never corrupt resume (``runtime/elastic.resumable_train``
 tests this by killing a run mid-save).
+
+Integrity: the manifest records a CRC32 per leaf at save time and
+``restore`` re-hashes every array it loads — silent on-disk corruption
+(bit rot, torn writes that survived the COMMIT marker) raises
+:class:`CheckpointCorruption` instead of resuming from garbage weights.
+``CheckpointManager.restore`` turns that into a fallback to the previous
+committed step.  Manifests written before CRCs existed restore
+unchecked (back-compat).
 """
 
 from __future__ import annotations
@@ -21,9 +29,14 @@ import os
 import pathlib
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruption(RuntimeError):
+    """A committed checkpoint failed CRC validation on restore."""
 
 
 def _flatten(tree):
@@ -52,7 +65,8 @@ def save(path: str | pathlib.Path, tree, extra: dict | None = None) -> None:
         np.save(tmp / f"arr_{i}.npy", arr)
         manifest["leaves"].append(
             {"i": i, "path": p, "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
+             "dtype": str(arr.dtype),
+             "crc32": int(zlib.crc32(arr.tobytes()) & 0xFFFFFFFF)})
     with open(tmp / "manifest.json", "w") as f:
         json.dump(manifest, f)
     for fn in tmp.iterdir():                      # durability before rename
@@ -80,20 +94,29 @@ def is_committed(path: str | pathlib.Path) -> bool:
 
 def restore(path: str | pathlib.Path, like):
     """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs)."""
+    ShapeDtypeStructs), validating each leaf's CRC32 when the manifest
+    carries one (raises :class:`CheckpointCorruption` on mismatch)."""
     path = pathlib.Path(path)
     if not is_committed(path):
         raise FileNotFoundError(f"no committed checkpoint at {path}")
     with open(path / "manifest.json") as f:
         manifest = json.load(f)
-    by_path = {m["path"]: m["i"] for m in manifest["leaves"]}
+    by_path = {m["path"]: m for m in manifest["leaves"]}
     kps = jax.tree_util.tree_flatten_with_path(like)[0]
     leaves = []
     for kp, leaf in kps:
         key = jax.tree_util.keystr(kp)
         if key not in by_path:
             raise KeyError(f"checkpoint missing leaf {key}")
-        arr = np.load(path / f"arr_{by_path[key]}.npy")
+        rec = by_path[key]
+        arr = np.load(path / f"arr_{rec['i']}.npy")
+        if "crc32" in rec:
+            got = int(zlib.crc32(arr.tobytes()) & 0xFFFFFFFF)
+            want = int(rec["crc32"])
+            if got != want:
+                raise CheckpointCorruption(
+                    f"leaf {key} of {path} failed CRC32 validation "
+                    f"(stored {want:#010x}, read {got:#010x})")
         leaves.append(arr)
     treedef = jax.tree.structure(like)
     return jax.tree.unflatten(treedef, leaves)

@@ -40,6 +40,12 @@ class CheckpointManager:
     def _path(self, step: int) -> pathlib.Path:
         return self.dir / f"step_{step}"
 
+    def path(self, step: int) -> pathlib.Path:
+        """Directory of ``step``'s checkpoint (for out-of-band readers
+        like the Supervisor's regrow prewarm, which stages the newest
+        committed checkpoint without going through ``restore``)."""
+        return self._path(step)
+
     def steps(self) -> list[int]:
         out = []
         for p in self.dir.iterdir():
@@ -68,14 +74,32 @@ class CheckpointManager:
         self._pending.clear()
 
     def restore(self, like, step: int | None = None):
+        """Restore a checkpoint into the structure of ``like``.
+
+        With an explicit ``step`` the restore is literal — a CRC
+        mismatch raises straight through.  With ``step=None`` the
+        manager walks committed steps newest-first and *falls back*
+        past any checkpoint that fails CRC validation (or whose files
+        vanished under it), raising
+        :class:`~.checkpointer.CheckpointCorruption` only when no
+        intact checkpoint remains."""
         self.wait()
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        if step is not None:
+            tree = checkpointer.restore(self._path(step), like)
+            return tree, checkpointer.read_extra(self._path(step))
+        steps = self.steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        tree = checkpointer.restore(self._path(step), like)
-        extra = checkpointer.read_extra(self._path(step))
-        return tree, extra
+        last_err: Exception | None = None
+        for s in reversed(steps):
+            try:
+                tree = checkpointer.restore(self._path(s), like)
+                return tree, checkpointer.read_extra(self._path(s))
+            except (checkpointer.CheckpointCorruption,
+                    OSError, KeyError) as e:
+                last_err = e
+        raise checkpointer.CheckpointCorruption(
+            f"no intact checkpoint in {self.dir}: {last_err}")
 
     def _gc(self) -> None:
         steps = self.steps()

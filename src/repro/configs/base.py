@@ -227,6 +227,11 @@ class ServeConfig:
     bucket_min: int = 64           # smallest prefill bucket edge
     prefill_impl: str = "fcp"      # "fcp" | "dense" (escape hatch)
     kind: str = "decode"           # decode cache layout ("decode"|"long")
+    # FCP prefill does not span the pod axis yet: on a pod mesh the
+    # loop falls back to dense prefill with a warning.  strict mode
+    # turns that degradation into the old hard error (deployments that
+    # would rather crash than silently serve slower).
+    strict_prefill: bool = False
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)

@@ -230,6 +230,10 @@ def main(argv=None):
                    help="bucketed FCP prefill, or the dense escape "
                         "hatch (also the 1-worker path)")
     p.add_argument("--prefill-tokens-per-worker", type=int, default=256)
+    p.add_argument("--strict-prefill", action="store_true",
+                   help="fail instead of falling back to dense prefill "
+                        "when prefill_impl='fcp' is unsupported on the "
+                        "mesh (pod axis)")
     p.add_argument("--bucket-min", type=int, default=32,
                    help="smallest prefill bucket edge")
     p.add_argument("--block-size", type=int, default=0,
@@ -261,7 +265,8 @@ def main(argv=None):
         cache_len=args.cache_len, decode_slots=args.slots,
         queue_depth=args.queue_depth, max_new_tokens=args.tokens,
         prefill_tokens_per_worker=tpw, bucket_min=args.bucket_min,
-        prefill_impl=args.prefill_impl, kind=args.kind)
+        prefill_impl=args.prefill_impl, kind=args.kind,
+        strict_prefill=args.strict_prefill)
     loop = ServingLoop(model, params, mesh, pcfg, scfg)
 
     rng = np.random.default_rng(args.seed)

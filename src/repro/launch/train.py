@@ -291,6 +291,7 @@ class StepRecord:
     gnorm: float
     n_workers: int
     ms: float
+    pods: int = 1
 
 
 class Supervisor:
@@ -313,47 +314,75 @@ class Supervisor:
       ``elastic.replan(speeds=...)`` so the chronically slow worker is
       assigned proportionally fewer (or cheaper) blocks; demote/promote
       events are rate-limited (``demote_cooldown``) and logged.
-    * **loss path** — on :class:`~repro.runtime.health.WorkerLoss` or
+    * **loss path** — on :class:`~repro.runtime.health.WorkerLoss`,
+      :class:`~repro.runtime.health.PodLoss` or
       :class:`~repro.runtime.elastic.InjectedFailure` the fleet shrinks
       to the survivors (new mesh, ``elastic.replan`` on the survivor
-      set), the newest committed checkpoint restores, and the
-      deterministic data stream replays — losing at most
-      ``checkpoint_every`` steps.
+      set), error-feedback residuals reset (never silently reused
+      across a topology change), the newest *intact* committed
+      checkpoint restores, and the deterministic data stream replays —
+      losing at most ``checkpoint_every`` steps.  A *pod* loss shrinks
+      the pod dimension to the largest divisor of the pinned pod count
+      (schedule tables replicate over pods, so every surviving pod must
+      see the same composition; a non-divisor remainder idles) and
+      kicks off **overlapping recovery**: survivors continue training
+      immediately while a background thread pre-warms the regrow path —
+      prefetching the pre-shrink plan-cache keys via
+      ``elastic.replan_key``, statically verifying the survivor
+      schedules, and staging the newest committed checkpoint in host
+      memory — so a returning pod rejoins at a step boundary
+      (``run(rejoin_step=...)``) with a measured, gated cost instead of
+      a cold restart.  See ``docs/elasticity.md``.
 
-    The loader is pinned to the *original* ``n_workers x
+    The loader is pinned to the *original* ``pods x n_workers x
     tokens_per_worker`` geometry no matter the current fleet: the
     global token stream is a pure function of ``(seed, step)`` and must
     not change shape under elasticity, so survivor fleets view the same
-    stream through ``elastic.reshape_frames`` (re-deriving the trailing
-    padding for the replanned frame geometry).
+    stream through ``elastic.reshape_pod_frames`` (each surviving pod
+    adopts whole pinned-pod sub-streams; padding is re-derived for the
+    replanned frame geometry).
     """
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig,
                  tcfg: TrainConfig, *, n_workers: int,
-                 tokens_per_worker: int, dist: str = "uniform",
+                 tokens_per_worker: int, pods: int = 1,
+                 dist: str = "uniform",
                  uniform_len: int = 1024, fresh: bool = False,
-                 checkpoint_dir=None,
+                 checkpoint_dir=None, checkpoint_keep: int = 3,
                  monitor: "health_mod.HealthMonitor | None" = None,
-                 start_fleet: int | None = None, verbose: bool = True):
+                 start_fleet=None, verbose: bool = True):
         self.cfg, self.pcfg, self.tcfg = cfg, pcfg, tcfg
+        self.p0 = int(pods)
         self.n0 = int(n_workers)
         self.tpw0 = int(tokens_per_worker)
-        self.n = int(start_fleet) if start_fleet else self.n0
+        # start_fleet: None = full strength, (pods, workers) tuple, or a
+        # bare worker count (legacy single-pod callers)
+        if start_fleet is None:
+            self.pods, self.n = self.p0, self.n0
+        elif isinstance(start_fleet, tuple):
+            self.pods, self.n = int(start_fleet[0]), int(start_fleet[1])
+        else:
+            self.pods, self.n = self.p0, int(start_fleet)
         self.verbose = verbose
         if not (cfg.uses_attention and cfg.n_layers):
             raise ValueError("Supervisor drives FCP attention models")
         self.model = Model(cfg, tp=1)
         self.loader = SyntheticLoader(
             dist=dist, n_frames=self.n0, tokens_per_worker=self.tpw0,
-            vocab_size=cfg.vocab_size, seed=tcfg.seed,
+            vocab_size=cfg.vocab_size, pods=self.p0, seed=tcfg.seed,
             uniform_len=uniform_len, plan_buckets=pcfg.plan_buckets,
             bucket_min_len=pcfg.block_size, fresh=fresh)
         self.monitor = monitor or health_mod.HealthMonitor.from_pcfg(
-            self.n, pcfg)
+            self.pods * self.n, pcfg,
+            topology=health_mod.FleetTopology(self.pods, self.n))
         self.plan_cache = pc.PlanCache(pcfg.plan_cache_size)
         self.planner = pc.PlanAheadPlanner(self.plan_cache,
                                            enabled=pcfg.plan_ahead)
-        self.manager = (CheckpointManager(checkpoint_dir)
+        # checkpoint_keep: GC window.  Drills that replay a recovery
+        # against a pruned copy of the directory widen it so the
+        # resume-step checkpoint survives to the end of the run.
+        self.manager = (CheckpointManager(checkpoint_dir,
+                                          keep_n=checkpoint_keep)
                         if checkpoint_dir else None)
         self.params = self.model.init(jax.random.key(tcfg.seed))
         self.opt = adamw.init(self.params)
@@ -374,68 +403,85 @@ class Supervisor:
         self.compiled_at: list[int] = []     # steps that built a new jit
         self.history: list[StepRecord] = []
         self.recoveries: list[dict] = []
+        self.rejoins: list[dict] = []
         self.last_scheds: dict = {}
+        self._prewarm = None                 # regrow-prewarm thread
+        self._prewarm_info: dict | None = None
+        self._staged: dict | None = None     # host-staged checkpoint
 
     # -- geometry ----------------------------------------------------------
 
-    def _mesh(self, n: int):
-        if n not in self._meshes:
+    def _mesh(self, pods: int, n: int):
+        ck = (pods, n)
+        if ck not in self._meshes:
             from .mesh import make_mesh
-            self._meshes[n] = make_mesh((n, 1), ("data", "model"))
-        return self._meshes[n]
+            if self.p0 == 1 and pods == 1:
+                self._meshes[ck] = make_mesh((n, 1), ("data", "model"))
+            else:
+                # pod axis stays first-class even at pods == 1 so a
+                # shrunken multi-pod fleet keeps one mesh family (and
+                # the reference drill run matches it bit-for-bit)
+                self._meshes[ck] = make_mesh(
+                    (pods, n, 1), ("pod", "data", "model"))
+        return self._meshes[ck]
 
-    def _fleet_batch(self, b: Batch, n: int, tpw: int) -> Batch:
-        """Reshape the pinned-geometry batch onto the current fleet:
-        same global token stream, padding re-derived (segment ids pad
-        with -1 so padding never aliases a document)."""
+    def _fleet_batch(self, b: Batch, pods: int, n: int, tpw: int) -> Batch:
+        """Re-view the pinned-geometry batch on the current fleet:
+        same global token stream, each surviving pod adopting
+        ``p0 // pods`` pinned-pod sub-streams, padding re-derived
+        (segment ids pad with -1 so padding never aliases a document)."""
         n_valid = int(sum(b.seqlens))
 
         def rs(a, fill=0):
-            return elastic.reshape_frames(a, n, tpw, n_valid=n_valid,
-                                          fill=fill)
+            return elastic.reshape_pod_frames(a, self.p0, pods, n, tpw,
+                                              n_valid=n_valid, fill=fill)
         return Batch(tokens=rs(b.tokens), labels=rs(b.labels),
                      positions=rs(b.positions),
                      seg_ids=rs(b.seg_ids, fill=-1),
-                     loss_mask=rs(b.loss_mask), seqlens=b.seqlens,
+                     loss_mask=rs(b.loss_mask),
+                     seqlens=elastic.pod_survivor_seqlens(
+                         b.seqlens, self.p0, pods),
                      composition_id=b.composition_id)
 
     # -- planning ----------------------------------------------------------
 
-    def _group_key(self, seqlens, n: int, m, speeds) -> tuple:
+    def _group_key(self, seqlens, pods: int, n: int, m, speeds) -> tuple:
         return elastic.replan_key(seqlens, n, self.pcfg.block_size,
-                                  mask=m, speeds=speeds, pcfg=self.pcfg)
+                                  mask=m, speeds=speeds, pcfg=self.pcfg,
+                                  pods=pods, base_pods=self.p0)
 
-    def _group_build(self, seqlens, n: int, m, speeds):
+    def _group_build(self, seqlens, pods: int, n: int, m, speeds):
         nh, nkv, hd = self._heads
         return functools.partial(
             elastic.replan, seqlens, n, self.pcfg.block_size,
             n_q_heads=nh, n_kv_heads=nkv, head_dim=hd, mask=m,
             speeds=None if speeds is None else np.asarray(speeds),
-            pcfg=self.pcfg, verify=None)
+            pcfg=self.pcfg, verify=None, pods=pods, base_pods=self.p0)
 
-    def _plan(self, seqlens, n: int, speeds):
+    def _plan(self, seqlens, pods: int, n: int, speeds):
         """One cache-backed survivor replan per distinct mask group,
         under the exact keys ``elastic.replan`` uses — a re-grown fleet
         re-hits its pre-shrink plans."""
         scheds: dict[MaskSpec, Schedule] = {}
         keys = []
         for m in self.group_masks:
-            key = self._group_key(seqlens, n, m, speeds)
+            key = self._group_key(seqlens, pods, n, m, speeds)
             scheds[m] = self.planner.get(
-                key, self._group_build(seqlens, n, m, speeds))
+                key, self._group_build(seqlens, pods, n, m, speeds))
             keys.append(key)
         return scheds, tuple(keys)
 
-    def _prefetch(self, seqlens, n: int, speeds) -> None:
+    def _prefetch(self, seqlens, pods: int, n: int, speeds) -> None:
         for m in self.group_masks:
             self.planner.prefetch(
-                self._group_key(seqlens, n, m, speeds),
-                self._group_build(seqlens, n, m, speeds))
+                self._group_key(seqlens, pods, n, m, speeds),
+                self._group_build(seqlens, pods, n, m, speeds))
 
-    def _step_fn(self, step: int, n: int, keys: tuple, scheds, batch):
-        ck = (n, keys)
+    def _step_fn(self, step: int, pods: int, n: int, keys: tuple,
+                 scheds, batch):
+        ck = (pods, n, keys)
         if ck not in self._step_cache:
-            mesh = self._mesh(n)
+            mesh = self._mesh(pods, n)
             if self.pcfg.layer_pipeline:
                 attn = make_pipelined_attn_fns(
                     self.cfg, self.pcfg, self.layer_masks, scheds, mesh)
@@ -461,7 +507,8 @@ class Supervisor:
         self.manager.save(
             step, {"params": self.params, "opt": self.opt},
             extra={"loader": self.loader.state.to_dict(),
-                   "n_workers": self.n}, blocking=False)
+                   "n_workers": self.n, "pods": self.pods},
+            blocking=False)
 
     def _restore(self) -> int:
         """Roll state back to the newest committed checkpoint (or step 0
@@ -482,84 +529,144 @@ class Supervisor:
 
     # -- driver ------------------------------------------------------------
 
-    def run(self, total_steps: int, *, fail=None, skew=None) -> dict:
-        """Train to ``total_steps``, surviving worker loss.
+    def run(self, total_steps: int, *, fail=None, skew=None,
+            rejoin_step: int | None = None) -> dict:
+        """Train to ``total_steps``, surviving worker and pod loss.
 
         ``fail`` (an :class:`~repro.runtime.elastic.InjectedFailure`
-        with ``worker``/``step``/``round`` set) kills that worker
-        mid-step once; ``skew`` maps worker id -> slowdown factor for
-        the telemetry (sim stand-in for a degraded chip).  Auto-resumes
-        from the newest committed checkpoint when one exists."""
+        with ``worker=``/``pod=`` plus ``step``/``round`` set) kills
+        that worker — or that whole pod — mid-step once; ``skew`` maps
+        flat worker id -> slowdown factor for the telemetry (sim
+        stand-in for a degraded chip); ``rejoin_step`` regrows a
+        shrunken fleet back to full strength at that step boundary
+        (sim stand-in for the lost pod returning).  Auto-resumes from
+        the newest intact committed checkpoint when one exists."""
         step = 0
         if self.manager is not None and self.manager.latest_step() is not None:
             step = self._restore()
         while step < total_steps:
             try:
-                step = self._run_steps(step, total_steps, fail, skew)
-            except (health_mod.WorkerLoss,
+                step = self._run_steps(step, total_steps, fail, skew,
+                                       rejoin_step)
+            except (health_mod.WorkerLoss, health_mod.PodLoss,
                     elastic.InjectedFailure) as e:
                 t0 = time.perf_counter()
                 at = int(getattr(e, "step", None) or step)
-                lost = int(getattr(e, "worker", None) or 0) % self.n
-                survivors = [i for i in range(self.n) if i != lost]
-                if not survivors:
-                    raise
-                if isinstance(e, elastic.InjectedFailure):
-                    self.monitor.note_failure(
-                        at, lost, detail=f"injected at round {e.round}")
-                self.monitor.resize(survivors)
-                self.n = len(survivors)
+                pod = getattr(e, "pod", None)
+                rec: dict = {"failed_step": at}
+                if pod is not None:
+                    if self.pods <= 1:
+                        raise
+                    lost = int(pod) % self.pods
+                    # schedule tables replicate over the pod axis, so
+                    # every surviving pod must view the same pinned
+                    # compositions: demote to the largest divisor fleet
+                    # and idle the remainder (docs/elasticity.md)
+                    new_pods = max(d for d in range(1, self.pods)
+                                   if self.p0 % d == 0)
+                    if isinstance(e, elastic.InjectedFailure):
+                        self.monitor.note_failure(
+                            at, pod=lost,
+                            detail=f"injected at round {e.round}")
+                    self.monitor.resize(
+                        topology=health_mod.FleetTopology(new_pods,
+                                                          self.n))
+                    rec["pod"] = lost
+                    rec["idle_pods"] = (self.pods - 1) - new_pods
+                    self.pods = new_pods
+                    what = f"pod {lost}"
+                else:
+                    lost = (int(getattr(e, "worker", None) or 0)
+                            % (self.pods * self.n))
+                    if isinstance(e, elastic.InjectedFailure):
+                        self.monitor.note_failure(
+                            at, lost, detail=f"injected at round {e.round}")
+                    if self.pods == 1:
+                        survivors = [i for i in range(self.n) if i != lost]
+                        if not survivors:
+                            raise
+                        self.monitor.resize(survivors)
+                        self.n = len(survivors)
+                    else:
+                        # multi-pod worker loss: pods run one replicated
+                        # schedule, so the lost worker's slot demotes
+                        # fleet-wide (uniform per-pod worker count)
+                        if self.n <= 1:
+                            raise
+                        self.monitor.resize(
+                            topology=health_mod.FleetTopology(
+                                self.pods, self.n - 1))
+                        self.n -= 1
+                    rec["worker"] = lost
+                    what = f"worker {lost}"
+                if self.residual is not None:
+                    # EF residuals accumulate per-topology quantization
+                    # error — never reuse them across a resize
+                    self.residual = compression.init_residuals(self.params)
+                    rec["ef_reset"] = True
                 resume = self._restore()
-                self.recoveries.append({
-                    "failed_step": at,
-                    "worker": lost, "resume_step": resume,
-                    "steps_lost": at - resume,
-                    "n_workers": self.n,
-                    "wall_s": time.perf_counter() - t0})
+                rec.update(resume_step=resume, steps_lost=at - resume,
+                           pods=self.pods, n_workers=self.n,
+                           wall_s=time.perf_counter() - t0)
+                self.recoveries.append(rec)
+                if pod is not None:
+                    # overlapping recovery: survivors train on while the
+                    # regrow path warms in the background
+                    self._start_prewarm(resume)
                 if self.verbose:
-                    print(f"[supervisor] lost worker {lost} "
-                          f"({e}); replanning on {self.n} survivors, "
-                          f"resuming at step {resume}", flush=True)
+                    print(f"[supervisor] lost {what} ({e}); replanning "
+                          f"on {self.pods}x{self.n} survivors, resuming "
+                          f"at step {resume}", flush=True)
                 step = resume
                 fail = None                  # consumed
+        if self._prewarm is not None:
+            self._prewarm.join()
+            self._prewarm = None
         self.planner.shutdown()
         if self.manager is not None:
             self.manager.wait()
         return self.summary()
 
-    def _run_steps(self, start: int, total: int, fail, skew) -> int:
-        n = self.n
-        skew_vec = None
-        if skew:
-            skew_vec = np.ones(n)
-            for w, f in dict(skew).items():
-                if 0 <= int(w) < n:
-                    skew_vec[int(w)] = float(f)
+    def _run_steps(self, start: int, total: int, fail, skew,
+                   rejoin_step=None) -> int:
         for step in range(start, total):
+            if (rejoin_step is not None and step >= int(rejoin_step)
+                    and (self.pods, self.n) != (self.p0, self.n0)):
+                self._rejoin(step)
+            pods, n = self.pods, self.n
+            nt = pods * n
+            skew_vec = None
+            if skew:
+                skew_vec = np.ones(nt)
+                for w, f in dict(skew).items():
+                    if 0 <= int(w) < nt:
+                        skew_vec[int(w)] = float(f)
             b = self.loader.next()
-            if (fail is not None and step == int(fail.step)
-                    and int(fail.worker) < n):
-                # mid-step: the batch was fetched and the round loop
-                # "started" — the step never commits, and the loader
-                # state is intentionally left advanced; recovery must
-                # rewind it from the checkpoint (replay proof)
-                raise fail
+            if fail is not None and step == int(fail.step):
+                hit = (int(fail.pod) < pods if fail.pod is not None
+                       else int(fail.worker) < nt)
+                if hit:
+                    # mid-step: the batch was fetched and the round loop
+                    # "started" — the step never commits, and the loader
+                    # state is intentionally left advanced; recovery
+                    # must rewind it from the checkpoint (replay proof)
+                    raise fail
             speeds = self.monitor.planning_speeds()
-            scheds, keys = self._plan(b.seqlens, n, speeds)
-            batch = batch_arrays(
-                self._fleet_batch(
-                    b, n,
-                    elastic.replan_tpw(b.seqlens, n,
-                                       self.pcfg.block_size)),
-                self.cfg)
-            fn = self._step_fn(step, n, keys, scheds, batch)
+            scheds, keys = self._plan(b.seqlens, pods, n, speeds)
+            tpw = elastic.replan_tpw(
+                elastic.pod_survivor_seqlens(b.seqlens, self.p0, pods),
+                n, self.pcfg.block_size)
+            batch = batch_arrays(self._fleet_batch(b, pods, n, tpw),
+                                 self.cfg)
+            fn = self._step_fn(step, pods, n, keys, scheds, batch)
             if step + 1 < total:
-                self._prefetch(self.loader.peek_seqlens(), n, speeds)
+                self._prefetch(self.loader.peek_seqlens(), pods, n,
+                               speeds)
             out, dt = ex.timed_call(fn, self.params, self.opt,
                                     self.residual, batch)
             self.params, self.opt, self.residual, loss, gnorm = out
             self.monitor.observe(
-                step, health_mod.per_worker_times(dt, n, skew_vec))
+                step, health_mod.per_worker_times(dt, nt, skew_vec))
             ev = self.monitor.maybe_replan(step)
             if ev is not None and self.verbose:
                 print(f"[supervisor] {ev.kind} workers {ev.workers} "
@@ -567,7 +674,8 @@ class Supervisor:
                       f"{ev.detail}", flush=True)
             self.monitor.check(step)
             self.history.append(StepRecord(step, float(loss),
-                                           float(gnorm), n, dt * 1e3))
+                                           float(gnorm), n, dt * 1e3,
+                                           pods))
             self.last_scheds = scheds
             every = max(int(self.pcfg.checkpoint_every), 0)
             if every and (step + 1) % every == 0:
@@ -575,15 +683,130 @@ class Supervisor:
             if self.verbose:
                 print(f"step {step:5d}  loss {float(loss):.4f}  "
                       f"gnorm {float(gnorm):.3f}  "
-                      f"[{n}w {dt * 1e3:.0f}ms]", flush=True)
+                      f"[{pods}x{n}w {dt * 1e3:.0f}ms]", flush=True)
         return total
+
+    # -- overlapping recovery ----------------------------------------------
+
+    def _start_prewarm(self, resume: int) -> None:
+        """Spawn the regrow-prewarm thread after a pod loss: it builds
+        and verifies survivor plans, re-warms the full-fleet plan-cache
+        keys the regrown fleet will ask for, and stages the newest
+        committed checkpoint in host memory — all while survivors keep
+        training (plan cache and planner are thread-safe)."""
+        import threading
+        self._prewarm_info = {
+            "plans_prefetched": 0, "survivor_schedules_verified": 0,
+            "violations": 0, "staged_step": None}
+        # pin the checkpoint to stage *now* (the newest committed step
+        # the recovery itself restored) — survivor saves landing while
+        # the thread runs must not move the staging target
+        stage = (self.manager.latest_step()
+                 if self.manager is not None else None)
+        self._prewarm = threading.Thread(
+            target=self._prewarm_regrow,
+            args=(resume, stage, self._prewarm_info), daemon=True)
+        self._prewarm.start()
+
+    def _prewarm_regrow(self, resume: int, stage: int | None,
+                        info: dict) -> None:
+        from ..analysis import verifier
+        from ..checkpoint import checkpointer
+        try:
+            # the pinned stream's distinct upcoming compositions (pure
+            # in (seed, step): safe to peek from a thread)
+            horizon = (max(2 * self.monitor.window, 4) if self.loader.fresh
+                       else len(self.loader.compositions))
+            seen: set = set()
+            comps = []
+            for k in range(horizon):
+                cid, seqlens = self.loader.composition(resume + k)
+                if cid not in seen:
+                    seen.add(cid)
+                    comps.append(seqlens)
+            nh, nkv, hd = self._heads
+            for seqlens in comps:
+                for m in self.group_masks:
+                    # survivor-fleet plan: build (shared with the live
+                    # loop via get_or_build) and statically verify
+                    skey = self._group_key(seqlens, self.pods, self.n,
+                                           m, None)
+                    sched = self.plan_cache.get_or_build(
+                        skey, self._group_build(seqlens, self.pods,
+                                                self.n, m, None))
+                    bad = verifier.verify_schedule(
+                        sched, n_q_heads=nh, n_kv_heads=nkv, head_dim=hd,
+                        in_dtype_bytes=float(self.pcfg.in_dtype_bytes))
+                    info["survivor_schedules_verified"] += 1
+                    info["violations"] += len(bad)
+                    # full-fleet plan the regrown fleet will need — at
+                    # full strength replan_key reduces to the pre-shrink
+                    # key, so warmup plans re-hit here
+                    fkey = self._group_key(seqlens, self.p0, self.n0,
+                                           m, None)
+                    if fkey not in self.plan_cache:
+                        self.plan_cache.get_or_build(
+                            fkey, self._group_build(seqlens, self.p0,
+                                                    self.n0, m, None))
+                    info["plans_prefetched"] += 1
+            if self.manager is not None and stage is not None:
+                like = {"params": self._init_tree["params"],
+                        "opt": self._init_tree["opt"]}
+                tree = checkpointer.restore(self.manager.path(stage),
+                                            like)
+                self._staged = {"step": int(stage), "tree": tree}
+                info["staged_step"] = int(stage)
+        except Exception as exc:    # best-effort: rejoin falls back cold
+            info["error"] = repr(exc)
+
+    def _rejoin(self, step: int) -> None:
+        """Regrow the fleet to full strength at a step boundary: join
+        the prewarm thread, reset monitor topology (with recalibration
+        burn-in) and EF residuals, and record the measured rejoin cost
+        plus whether the full-fleet plan keys were already cached."""
+        t0 = time.perf_counter()
+        if self._prewarm is not None:
+            self._prewarm.join()
+            self._prewarm = None
+        m0 = self.plan_cache.stats.misses
+        c0 = len(self.compiled_at)
+        self.pods, self.n = self.p0, self.n0
+        self.monitor.resize(
+            topology=health_mod.FleetTopology(self.p0, self.n0))
+        # the regrown fleet adopts the survivors' live state: pull it to
+        # host and rebind as uncommitted arrays so the full-fleet jit
+        # re-shards onto the big mesh (the broadcast a real rejoin pays
+        # — measured as part of rejoin_ms)
+        self.params = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(x)), self.params)
+        self.opt = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(x)), self.opt)
+        if self.residual is not None:
+            self.residual = compression.init_residuals(self.params)
+        keys_cached = all(
+            self._group_key(self.loader.peek_seqlens(), self.p0,
+                            self.n0, m, None) in self.plan_cache
+            for m in self.group_masks)
+        self.rejoins.append({
+            "step": step, "pods": self.pods, "n_workers": self.n,
+            "rejoin_ms": (time.perf_counter() - t0) * 1e3,
+            "plan_keys_cached": keys_cached,
+            "plan_misses_before": m0, "compiles_before": c0,
+            "prewarm": self._prewarm_info})
+        if self.verbose:
+            print(f"[supervisor] pod rejoin at step {step}: fleet back "
+                  f"to {self.p0}x{self.n0} "
+                  f"({'warm' if keys_cached else 'cold'} plans)",
+                  flush=True)
 
     def summary(self) -> dict:
         s = self.plan_cache.stats
         return {
             "steps": len(self.history),
+            "pods": self.pods,
             "n_workers": self.n,
             "recoveries": self.recoveries,
+            "rejoins": self.rejoins,
             "events": [dataclasses.asdict(e)
                        for e in self.monitor.events],
             "compiles": len(self.compiled_at),
@@ -670,10 +893,12 @@ def main(argv=None):
                         " the steps lost to a mid-step worker failure)")
     p.add_argument("--supervised", action=argparse.BooleanOptionalAction,
                    default=True,
-                   help="fault-tolerant supervised loop for single-pod"
-                        " FCP runs: health telemetry, closed-loop"
-                        " straggler demotion, checkpoint/replay recovery"
-                        " (--no-supervised forces the plain loop)")
+                   help="fault-tolerant supervised loop for FCP runs"
+                        " (single- or multi-pod): health telemetry,"
+                        " closed-loop straggler demotion, pod-level"
+                        " failure domains with overlapping recovery,"
+                        " checkpoint/replay recovery (--no-supervised"
+                        " forces the plain loop)")
     p.add_argument("--health-window", type=int, default=8,
                    help="consecutive straggler observations before a"
                         " demotion replan fires (hysteresis)")
@@ -727,13 +952,15 @@ def main(argv=None):
     tcfg = TrainConfig(lr=args.lr, warmup_steps=2, total_steps=args.steps)
 
     if (args.supervised and cfg.uses_attention and n_cp > 1
-            and pods == 1 and tp == 1):
-        # single-pod FCP: the fault-tolerant supervised loop (health
-        # telemetry + closed-loop demotion + checkpoint/replay
-        # recovery); other topologies keep the plain loop below
+            and tp == 1):
+        # FCP under the fault-tolerant supervised loop (health
+        # telemetry + closed-loop demotion + pod-level failure domains
+        # + checkpoint/replay recovery); TP topologies keep the plain
+        # loop below
         sup = Supervisor(cfg, pcfg, tcfg, n_workers=n_cp,
                          tokens_per_worker=args.tokens_per_worker,
-                         dist=args.dist, fresh=args.fresh_stream,
+                         pods=pods, dist=args.dist,
+                         fresh=args.fresh_stream,
                          checkpoint_dir=args.checkpoint_dir)
         summary = sup.run(args.steps)
         s = sup.plan_cache.stats

@@ -82,21 +82,56 @@ def replan_tpw(seqlens: Sequence[int], new_n_workers: int,
     return -(-total // (new_n_workers * block_size)) * block_size
 
 
+def pod_survivor_seqlens(seqlens: Sequence[int], base_pods: int,
+                         pods: int) -> list[int]:
+    """The per-pod composition a ``pods``-pod survivor fleet sees of a
+    stream pinned to ``base_pods`` pods.
+
+    The pinned loader emits ``base_pods`` sub-streams per step, each
+    with the *same* composition ``seqlens`` (distinct tokens).  A
+    survivor fleet regroups them: each surviving pod absorbs
+    ``base_pods // pods`` whole sub-streams back-to-back, so its
+    composition is ``seqlens`` repeated that many times — documents
+    stay intact and in global order (``reshape_pod_frames`` moves the
+    tokens the same way).  ``pods`` must divide ``base_pods``: a
+    non-divisor fleet could not give every pod the same composition,
+    and FCP schedule tables replicate across the pod axis, so every pod
+    must run the *same* schedule (the supervised driver demotes a
+    non-divisor survivor count to the largest divisor, idling the
+    remainder — see ``docs/elasticity.md``)."""
+    base_pods, pods = int(base_pods), int(pods)
+    if base_pods < 1 or pods < 1:
+        raise ValueError(f"degenerate pod counts {base_pods} -> {pods}")
+    if base_pods % pods:
+        raise ValueError(
+            f"survivor pod count {pods} must divide the pinned pod "
+            f"count {base_pods} (every pod must see the same "
+            f"composition; demote to a divisor fleet instead)")
+    return list(seqlens) * (base_pods // pods)
+
+
 def replan_key(seqlens: Sequence[int], new_n_workers: int,
                block_size: int, *, mask=True, coalesce: int | None = None,
                wire=None, in_dtype_bytes: float | None = None,
                overlap: bool | None = None,
-               speeds=None, pcfg: ParallelConfig | None = None) -> tuple:
+               speeds=None, pcfg: ParallelConfig | None = None,
+               pods: int = 1, base_pods: int | None = None) -> tuple:
     """The exact plan-cache key ``replan`` stores under.
 
     Exposed so supervised drivers can *prefetch* survivor-set replans
     (plan-ahead) and assert cache re-hits under the same keys ``replan``
     will use when the fault actually lands — key-construction drift
     between the two would silently turn every recovery into a cold
-    plan."""
+    plan.  ``pods``/``base_pods`` view ``seqlens`` (one pod's pinned
+    composition) through a shrunken pod dimension, exactly as ``replan``
+    does; at full strength (``pods == base_pods``) the key is byte-
+    identical to the pre-shrink key, so a re-grown pod fleet re-hits
+    its pre-shrink plans."""
     mask = coerce_mask(mask)
     coalesce, wire, in_dtype_bytes, overlap = _resolve_knobs(
         coalesce, wire, in_dtype_bytes, overlap, pcfg)
+    seqlens = pod_survivor_seqlens(
+        seqlens, pods if base_pods is None else base_pods, pods)
     tpw = replan_tpw(seqlens, new_n_workers, block_size)
     return pc.plan_key(seqlens, new_n_workers, tpw, block_size,
                        mask=mask, coalesce=coalesce, wire=wire,
@@ -112,11 +147,21 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
            speeds: np.ndarray | None = None,
            pcfg: ParallelConfig | None = None,
            cache: pc.PlanCache | None = None,
-           verify: bool | None = True) -> Schedule:
+           verify: bool | None = True,
+           pods: int = 1, base_pods: int | None = None) -> Schedule:
     """Rebuild the FCP schedule for a new worker count.
 
     tokens_per_worker grows/shrinks to keep the global token budget; the
     caller re-shards the batch into the new frame geometry.
+
+    ``pods``/``base_pods`` extend the resize to the *pod* dimension:
+    ``seqlens`` is one pod's composition of a stream pinned to
+    ``base_pods`` pods, and the schedule is built for the composition
+    each of the ``pods`` surviving pods absorbs
+    (:func:`pod_survivor_seqlens` — whole sub-streams concatenate, so
+    ``pods`` must divide ``base_pods``).  At ``pods == base_pods`` this
+    is exactly the per-pod schedule of the full fleet, under the same
+    cache key, so regrowing the pod dimension re-hits pre-shrink plans.
 
     ``pcfg`` (when given) carries the planning knobs across the resize —
     coalescing survives here, and the amortized-planning settings
@@ -150,6 +195,8 @@ def replan(seqlens: Sequence[int], new_n_workers: int, block_size: int,
     mask = coerce_mask(mask)
     coalesce, wire, in_dtype_bytes, overlap = _resolve_knobs(
         coalesce, wire, in_dtype_bytes, overlap, pcfg)
+    seqlens = pod_survivor_seqlens(
+        seqlens, pods if base_pods is None else base_pods, pods)
     tpw = replan_tpw(seqlens, new_n_workers, block_size)
 
     def build() -> Schedule:
@@ -179,7 +226,8 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
                   speeds: np.ndarray | None = None,
                   pcfg: ParallelConfig | None = None,
                   cache: pc.PlanCache | None = None,
-                  verify: bool | None = True
+                  verify: bool | None = True,
+                  pods: int = 1, base_pods: int | None = None
                   ) -> dict[MaskSpec, Schedule]:
     """Rebuild one schedule per *distinct* mask for the new worker count.
 
@@ -188,6 +236,8 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
     appearance is preserved.  Returns ``{mask_spec: schedule}`` — the
     caller re-routes each layer's attention fn through its mask's
     schedule, so an elastic resize preserves every layer group.
+    ``pods``/``base_pods`` ride through to :func:`replan` so a pod-
+    dimension resize rebuilds every mask group too.
     """
     out: dict[MaskSpec, Schedule] = {}
     for m in masks:
@@ -199,7 +249,8 @@ def replan_groups(seqlens: Sequence[int], new_n_workers: int,
                         head_dim=head_dim, mask=m, coalesce=coalesce,
                         wire=wire, in_dtype_bytes=in_dtype_bytes,
                         overlap=overlap, speeds=speeds, pcfg=pcfg,
-                        cache=cache, verify=verify)
+                        cache=cache, verify=verify, pods=pods,
+                        base_pods=base_pods)
     return out
 
 
@@ -215,17 +266,24 @@ class InjectedFailure(RuntimeError):
     during step ``step`` at coalesced ppermute round ``round`` — i.e.
     *mid-step*, so that step never commits and recovery must replan on
     the survivors, restore the newest committed checkpoint, and replay
-    the data stream."""
+    the data stream.  ``pod`` instead marks a *pod-scoped* loss: every
+    worker in that pod goes silent at once (the whole DCN-attached
+    failure domain), and recovery shrinks the fleet's pod dimension
+    rather than its worker dimension."""
 
     def __init__(self, *args, worker: int | None = None,
-                 step: int | None = None, round: int | None = None):
+                 step: int | None = None, round: int | None = None,
+                 pod: int | None = None):
         if not args:
-            args = (f"injected failure (worker={worker}, step={step}, "
+            who = (f"pod={pod}" if pod is not None
+                   else f"worker={worker}")
+            args = (f"injected failure ({who}, step={step}, "
                     f"round={round})",)
         super().__init__(*args)
         self.worker = worker
         self.step = step
         self.round = round
+        self.pod = pod
 
 
 @dataclasses.dataclass
@@ -245,7 +303,8 @@ class StragglerTracker:
         else:
             self._times = (1 - self.ewma) * self._times + self.ewma * t
 
-    def resize(self, survivor_ids: Sequence[int]) -> None:
+    def resize(self, survivor_ids: Sequence[int],
+               burnin: bool = False) -> None:
         """Remap EWMA state onto a new worker set.
 
         Elastic shrink (every survivor id is a current worker): the
@@ -254,11 +313,17 @@ class StragglerTracker:
         supervised driver renumbers mesh slots.  Growth / replacement
         (any id outside the current range): fresh workers have no
         history, and a partial carry-over would misattribute speeds, so
-        the EWMA resets and re-converges."""
+        the EWMA resets and re-converges.
+
+        ``burnin=True`` discards the EWMA outright even on a clean
+        shrink — a *recalibration burn-in* after a topology change:
+        speeds read 1.0 until fresh step timings re-converge, because
+        a resize moves collective boundaries (pod axis, DCN paths) and
+        stale per-worker EWMAs would misattribute the new costs."""
         ids = [int(i) for i in survivor_ids]
         if len(set(ids)) != len(ids):
             raise ValueError(f"duplicate worker ids in {ids}")
-        shrink = (self._times is not None
+        shrink = (not burnin and self._times is not None
                   and all(0 <= i < self.n_workers for i in ids))
         self._times = self._times[ids] if shrink else None
         self.n_workers = len(ids)
@@ -338,3 +403,67 @@ def reshape_frames(arr: np.ndarray, new_n_workers: int,
             [flat, np.full((pad,) + flat.shape[1:], fill, flat.dtype)])
     return flat.reshape(
         (new_n_workers, tokens_per_worker) + arr.shape[2:])
+
+
+def reshape_pod_frames(arr: np.ndarray, old_pods: int, new_pods: int,
+                       new_workers: int,
+                       tokens_per_worker: int | None = None, *,
+                       n_valid: int | None = None,
+                       fill=0) -> np.ndarray:
+    """Re-view a pod-major frame stack for a shrunken (or regrown) pod
+    dimension.
+
+    The loader pins its geometry at launch: ``[old_pods * w0, T, ...]``
+    pod-major frames, every pod carrying the same *composition* over
+    distinct tokens.  After a pod loss, each surviving pod adopts the
+    token sub-streams of ``old_pods // new_pods`` pinned pods
+    back-to-back (so the global stream is preserved bit-for-bit and a
+    regrow replays identically).  ``new_pods`` must divide ``old_pods``
+    — a non-divisor fleet cannot give every pod the same composition,
+    mirroring :func:`pod_survivor_seqlens`.
+
+    ``n_valid`` counts the leading real tokens *per pinned pod* (default:
+    the whole frame); padding between sub-streams is dropped and
+    re-grown with ``fill`` at each surviving pod's tail, exactly like
+    :func:`reshape_frames` (which this reduces to when both pod counts
+    are 1)."""
+    old_pods = int(old_pods)
+    new_pods = int(new_pods)
+    if old_pods < 1 or new_pods < 1:
+        raise ValueError(
+            f"pod counts must be >= 1, got {old_pods} -> {new_pods}")
+    if old_pods % new_pods:
+        raise ValueError(
+            f"surviving pod count {new_pods} must divide the pinned pod "
+            f"count {old_pods} (every pod must see the same composition; "
+            f"demote to a divisor fleet instead)")
+    f, t = arr.shape[:2]
+    if f % old_pods:
+        raise ValueError(
+            f"{f} frames do not split over {old_pods} pinned pods")
+    w0 = f // old_pods
+    per = old_pods // new_pods
+    pod_total = w0 * t
+    if n_valid is None:
+        n_valid = pod_total
+    if not 0 <= n_valid <= pod_total:
+        raise ValueError(f"n_valid={n_valid} outside [0, {pod_total}]")
+    # [old_pods, w0*t, ...] -> strip per-pod padding -> regroup survivors
+    sub = arr.reshape((old_pods, pod_total) + arr.shape[2:])
+    valid = sub[:, :n_valid]
+    groups = valid.reshape((new_pods, per * n_valid) + arr.shape[2:])
+    if tokens_per_worker is None:
+        tokens_per_worker = -(-per * n_valid // new_workers)
+    new_total = new_workers * tokens_per_worker
+    if new_total < per * n_valid:
+        raise ValueError(
+            f"{new_workers}x{tokens_per_worker} frames hold {new_total} "
+            f"tokens < {per * n_valid} valid tokens per surviving pod")
+    pad = new_total - per * n_valid
+    if pad:
+        groups = np.concatenate(
+            [groups,
+             np.full((new_pods, pad) + arr.shape[2:], fill, arr.dtype)],
+            axis=1)
+    return groups.reshape(
+        (new_pods * new_workers, tokens_per_worker) + arr.shape[2:])

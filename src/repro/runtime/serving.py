@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Sequence
 
@@ -251,9 +252,17 @@ class ServingLoop:
         self._uses_fcp = (scfg.prefill_impl == "fcp"
                           and cfg.uses_attention and self.n_cp > 1)
         if self._uses_fcp and axis_sizes.get("pod", 1) > 1:
-            raise ValueError(
-                "FCP prefill runs on 2-axis (data, model) meshes; pass "
-                "prefill_impl='dense' on pod meshes")
+            if scfg.strict_prefill:
+                raise ValueError(
+                    "FCP prefill runs on 2-axis (data, model) meshes "
+                    "and ServeConfig.strict_prefill is set; pass "
+                    "prefill_impl='dense' on pod meshes")
+            warnings.warn(
+                "FCP prefill does not support pod meshes yet; falling "
+                "back to prefill_impl='dense' (set "
+                "ServeConfig.strict_prefill=True to fail instead)",
+                RuntimeWarning, stacklevel=2)
+            self._uses_fcp = False
         if self._uses_fcp and self.tpw % pcfg.block_size:
             raise ValueError(
                 f"prefill_tokens_per_worker {self.tpw} must be a "

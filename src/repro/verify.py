@@ -164,8 +164,12 @@ def fuzz_elastic(n_cases: int, seed: int, verbose: bool = False) -> int:
     supervised loop): for each random case, build the base plan through
     a live cache, kill each worker id in turn and verify the replanned
     schedule on the survivors, then regrow to the original fleet and
-    assert the cache re-hits the pre-shrink plan *object*.  Returns the
-    number of cases with violations (0 == clean run)."""
+    assert the cache re-hits the pre-shrink plan *object*.  Each case
+    then replays as a multi-pod fleet: whole *pods* die down the
+    divisor chain (every surviving pod adopts the lost pods'
+    sub-streams via ``pods=/base_pods=``), each survivor schedule
+    verifies, and the pod regrow must re-hit the pre-shrink plan too.
+    Returns the number of cases with violations (0 == clean run)."""
     from .runtime import elastic
 
     rng = np.random.default_rng(seed)
@@ -178,14 +182,16 @@ def fuzz_elastic(n_cases: int, seed: int, verbose: bool = False) -> int:
         hd = case["head_dim"]
         cache = pc.PlanCache(max_size=64, verify=False)
 
-        def rp(nw, sp, _c=case, _cache=cache, _nh=nh, _nkv=nkv, _hd=hd):
+        def rp(nw, sp, pods=1, base_pods=None, _c=case, _cache=cache,
+               _nh=nh, _nkv=nkv, _hd=hd):
             return elastic.replan(
                 _c["seqlens"], nw, _c["block_size"], n_q_heads=_nh,
                 n_kv_heads=_nkv, head_dim=_hd, mask=_c["mask"],
                 coalesce=_c["coalesce"], wire=_c["wire"],
                 in_dtype_bytes=_c["in_dtype_bytes"],
                 overlap=_c.get("overlap", False), speeds=_sp(sp),
-                cache=_cache, verify=False)
+                cache=_cache, verify=False, pods=pods,
+                base_pods=base_pods)
 
         def _sp(sp):
             return None if sp is None else np.asarray(sp)
@@ -223,6 +229,42 @@ def fuzz_elastic(n_cases: int, seed: int, verbose: bool = False) -> int:
             violations.append(
                 f"regrow to {n} workers missed the plan cache "
                 f"(pre-shrink plan was evicted or re-keyed)")
+        # pod-scoped kills: the same composition viewed as a pods0-pod
+        # fleet (the pinned loader repeats it per pod).  Walk the
+        # divisor chain down — each shrink hands every surviving pod
+        # the lost pods' sub-streams — and verify every survivor
+        # schedule; then regrow, which at full strength reduces to the
+        # plain key and must re-hit the pre-shrink plan object.
+        tokens = sum(case["seqlens"])
+        pods0 = 4 if (tokens * 4 <= 4096 and int(rng.integers(2))) else 2
+        p = pods0 // 2
+        while p >= 1:
+            surv_sp = case["speeds"]
+            try:
+                sched = rp(n, surv_sp, pods=p, base_pods=pods0)
+            except Exception as e:
+                if isinstance(e, verifier.PlanVerificationError):
+                    raise
+                if verbose:
+                    print(f"[{i}] planner rejected pod fleet "
+                          f"{p}/{pods0} ({e}): {_describe(case)}")
+                break                       # planner refusal is fine
+            key = elastic.replan_key(
+                case["seqlens"], n, case["block_size"],
+                mask=case["mask"], coalesce=case["coalesce"],
+                wire=case["wire"],
+                in_dtype_bytes=case["in_dtype_bytes"],
+                overlap=case.get("overlap", False), speeds=surv_sp,
+                pods=p, base_pods=pods0)
+            violations += verifier.verify_schedule(
+                sched, n_q_heads=nh, n_kv_heads=nkv, head_dim=hd,
+                in_dtype_bytes=case["in_dtype_bytes"], key=key)
+            p //= 2
+        pod_regrown = rp(n, case["speeds"], pods=pods0, base_pods=pods0)
+        if pod_regrown is not base:
+            violations.append(
+                f"pod regrow to {pods0} pods missed the plan cache "
+                f"(full-strength key must equal the pre-shrink key)")
         if violations:
             bad += 1
             print(f"[{i}] {len(violations)} violation(s): "
@@ -231,7 +273,8 @@ def fuzz_elastic(n_cases: int, seed: int, verbose: bool = False) -> int:
             for viol in violations[:10]:
                 print(f"      {viol}", file=sys.stderr)
         elif verbose:
-            print(f"[{i}] ok ({n} kills + regrow): {_describe(case)}")
+            print(f"[{i}] ok ({n} worker kills + pod chain "
+                  f"{pods0}->1 + regrows): {_describe(case)}")
     return bad
 
 
@@ -247,8 +290,9 @@ def main(argv: Sequence[str] | None = None) -> int:
                     help="fuzz random plans instead of one explicit plan")
     ap.add_argument("--fuzz-elastic", action="store_true",
                     help="fuzz survivor-set replans: kill each worker"
-                         " in turn, verify the replanned schedule, and"
-                         " assert plan-cache re-hit on regrow")
+                         " in turn, then whole pods down the divisor"
+                         " chain, verify every survivor schedule, and"
+                         " assert plan-cache re-hit on both regrows")
     ap.add_argument("--plans", type=int, default=200,
                     help="number of fuzz plans (default 200)")
     ap.add_argument("--seed", type=int, default=0)
@@ -279,7 +323,7 @@ def main(argv: Sequence[str] | None = None) -> int:
                   f"invariants", file=sys.stderr)
             return 1
         print(f"ok: {args.plans} survivor-set replan sweeps verified "
-              f"(seed {args.seed}), 0 violations")
+              f"(worker + pod kills, seed {args.seed}), 0 violations")
         return 0
 
     if args.fuzz:

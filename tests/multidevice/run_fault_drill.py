@@ -15,6 +15,15 @@ Proves the runtime health loop end-to-end on real jitted training:
   ``distributor.assign_blocks`` (the demoted schedule carries less
   modeled compute on worker 3), and flipping plans must go through the
   plan cache (the demoted key misses exactly once, then re-hits).
+* **pod drill** — pod 1 of a 2x2 fleet dies mid-step (pod-scoped
+  ``InjectedFailure`` at step 5).  The supervisor must shrink the pod
+  dimension to the surviving pod, reset the error-feedback residuals,
+  restore, and replay (<= ``checkpoint_every`` steps lost) while the
+  overlapping-recovery thread pre-warms the regrow path; the rejoin at
+  step 9 must re-hit the pre-shrink plan-cache keys (asserted via
+  ``elastic.replan_key``) with zero plan misses and zero recompiles
+  after it, and both the survivor and post-rejoin losses/grad-norms
+  must match an uninterrupted reference run to <= 1e-6 normalized.
 
 Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
        PYTHONPATH=src python tests/multidevice/run_fault_drill.py
@@ -42,6 +51,9 @@ N0, TPW0, BS = 4, 512, 128
 CKPT_EVERY = 2
 FAIL_STEP, FAIL_WORKER, FAIL_ROUND = 7, 1, 2
 TOTAL = 12
+# pod drill geometry: 2 pods x 2 workers, pod 1 dies, regrows at 9
+P0, POD_WORKERS, POD_TPW = 2, 2, 256
+POD_FAIL_STEP, POD_REJOIN = 5, 9
 
 
 def _cfg():
@@ -60,6 +72,9 @@ def _pcfg(**kw):
 def _sup(pcfg, ckpt_dir, **kw):
     tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=TOTAL)
     kw.setdefault("dist", "real_world")
+    # keep every checkpoint: the reference run restores from a pruned
+    # copy of the directory, so step_{resume-1} must survive GC
+    kw.setdefault("checkpoint_keep", 8)
     return Supervisor(_cfg(), pcfg, tcfg, n_workers=N0,
                       tokens_per_worker=TPW0, checkpoint_dir=ckpt_dir,
                       verbose=False, **kw)
@@ -185,6 +200,101 @@ def straggler_drill() -> None:
           f"{s.misses} misses across the demotion flip")
 
 
+def _pod_sup(ckpt_dir, start_fleet=None):
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=TOTAL,
+                       grad_compression=True)
+    # checkpoint_keep wide enough that step_{resume-1} survives the
+    # GC to the end of the run — the reference below restores from a
+    # pruned copy of the directory, so it must still hold that step
+    return Supervisor(_cfg(), _pcfg(), tcfg, n_workers=POD_WORKERS,
+                      tokens_per_worker=POD_TPW, pods=P0,
+                      dist="real_world", checkpoint_dir=ckpt_dir,
+                      checkpoint_keep=8, verbose=False,
+                      start_fleet=start_fleet)
+
+
+def pod_drill(tmp: pathlib.Path) -> None:
+    d = tmp / "pod_primary"
+    sup = _pod_sup(d)
+    fail = elastic.InjectedFailure(pod=1, step=POD_FAIL_STEP, round=1)
+    sup.run(TOTAL, fail=fail, rejoin_step=POD_REJOIN)
+
+    # -- shrink: pod-scoped recovery within the checkpoint budget ------
+    assert len(sup.recoveries) == 1, sup.recoveries
+    rec = sup.recoveries[0]
+    assert rec["failed_step"] == POD_FAIL_STEP
+    assert rec["pod"] == 1 and "worker" not in rec, rec
+    assert rec["pods"] == 1 and rec["n_workers"] == POD_WORKERS, rec
+    assert 0 <= rec["steps_lost"] <= CKPT_EVERY, rec
+    # EF residuals must reset over the survivors, never be reused
+    assert rec.get("ef_reset"), rec
+    fails = [e for e in sup.monitor.events if e.kind == "fail"]
+    assert fails and fails[0].pod == 1, fails
+    assert set(fails[0].workers) == {2, 3}, fails   # pod 1's flat slots
+    print(f"  pod drill: lost {rec['steps_lost']} step(s) "
+          f"(<= {CKPT_EVERY}), resumed at {rec['resume_step']} on "
+          f"{rec['pods']}x{rec['n_workers']} survivors, EF reset")
+
+    # -- overlapping recovery: the prewarm thread did its three jobs ---
+    assert len(sup.rejoins) == 1, sup.rejoins
+    rj = sup.rejoins[0]
+    assert rj["step"] == POD_REJOIN and rj["pods"] == P0, rj
+    pw = rj["prewarm"]
+    assert "error" not in pw, pw
+    assert pw["survivor_schedules_verified"] >= 1, pw
+    assert pw["violations"] == 0, pw
+    assert pw["plans_prefetched"] >= 1, pw
+    assert pw["staged_step"] == rec["resume_step"] - 1, (pw, rec)
+    print(f"  pod drill: prewarm verified "
+          f"{pw['survivor_schedules_verified']} survivor schedule(s) "
+          f"(0 violations), staged checkpoint step "
+          f"{pw['staged_step']}, prefetched {pw['plans_prefetched']} "
+          f"regrow plan(s)")
+
+    # -- rejoin: re-hits pre-shrink plans, zero misses / recompiles ----
+    assert rj["plan_keys_cached"] is True, rj
+    s = sup.plan_cache.stats
+    assert s.misses == rj["plan_misses_before"], (s.to_dict(), rj)
+    assert len(sup.compiled_at) == rj["compiles_before"], \
+        (sup.compiled_at, rj)
+    # the exact key contract: the full-strength replan_key reduces to
+    # the pre-shrink key, so the regrown fleet re-hits the warmup plans
+    m = sup.group_masks[0]
+    key = elastic.replan_key(
+        sup.loader.composition(POD_REJOIN)[1], POD_WORKERS, BS,
+        mask=m, pcfg=sup.pcfg, pods=P0, base_pods=P0)
+    assert key in sup.plan_cache, "regrow key missing from plan cache"
+    print(f"  pod drill: rejoin at step {POD_REJOIN} re-hit cached "
+          f"plans (replan_key asserted), 0 plan misses and "
+          f"0 recompiles after rejoin ({rj['rejoin_ms']:.0f}ms)")
+
+    # -- equivalence: survivor AND post-rejoin phases match an
+    # uninterrupted reference restored from the same checkpoint -------
+    d2 = tmp / "pod_reference"
+    shutil.copytree(d, d2)
+    for p in d2.iterdir():
+        if (p.name.startswith("step_") and not p.name.endswith(".tmp")
+                and int(p.name.split("_")[1]) > rec["resume_step"] - 1):
+            shutil.rmtree(p)
+    ref = _pod_sup(d2, start_fleet=(1, POD_WORKERS))
+    ref.run(TOTAL, rejoin_step=POD_REJOIN)
+    want = {(r.step, r.pods): r for r in ref.history}
+    got = {(r.step, r.pods): r for r in sup.history
+           if (r.step, r.pods) in want}
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    assert any(p == P0 for _, p in got), "no post-rejoin steps compared"
+    diffs = []
+    for k in got:
+        diffs.append(abs(got[k].loss - want[k].loss)
+                     / max(abs(want[k].loss), 1e-9))
+        diffs.append(abs(got[k].gnorm - want[k].gnorm)
+                     / max(abs(want[k].gnorm), 1e-9))
+    assert max(diffs) <= 1e-6, max(diffs)
+    print(f"  pod drill: survivor + post-rejoin loss/gnorm match the "
+          f"uninterrupted reference (max normalized diff "
+          f"{max(diffs):.2e} <= 1e-6 over {len(got)} steps)")
+
+
 def main() -> int:
     tmp = pathlib.Path(tempfile.mkdtemp(prefix="fault_drill_"))
     try:
@@ -192,6 +302,9 @@ def main() -> int:
         kill_drill(tmp)
         print("straggler drill (worker 3 at 2x step time):")
         straggler_drill()
+        print(f"pod drill (pod 1 of {P0} dies at step {POD_FAIL_STEP}, "
+              f"rejoin at {POD_REJOIN}):")
+        pod_drill(tmp)
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
     print("ALL FAULT DRILL CASES PASSED")

@@ -10,7 +10,10 @@ over a mixed-length stream.  Asserts the serving invariants end-to-end:
 * every transformer prompt takes exactly one FCP prefill call (no
   teacher-forced prompt tokens);
 * FCP prefill generates the same tokens as the dense escape hatch on
-  the same mesh.
+  the same mesh;
+* requesting FCP prefill on a pod mesh warns and falls back to dense
+  (it still serves), and ``strict_prefill=True`` turns the fallback
+  into the old hard error.
 """
 
 import os
@@ -19,6 +22,7 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
 import dataclasses                                              # noqa: E402
+import warnings                                                 # noqa: E402
 
 import jax                                                      # noqa: E402
 import numpy as np                                              # noqa: E402
@@ -70,6 +74,34 @@ def main():
               f"recompiles={recompiles}")
 
     assert outs["fcp"] == outs["dense"], "fcp/dense token mismatch"
+
+    # pod-mesh fallback: FCP prefill on a (pod, data, model) mesh warns
+    # and serves via the dense path instead of refusing to start
+    pod_mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        loop = ServingLoop(model, params, pod_mesh, pcfg,
+                           scfg.replace(prefill_impl="fcp"))
+    assert any("pod meshes" in str(w.message) for w in caught), caught
+    assert not loop._uses_fcp
+    loop.warmup()
+    rep = loop.run(prompts[:4], max_new=8)
+    assert rep["requests"] == 4 and rep["prefill_impl"] == "dense"
+    pod_toks = {r.rid: list(map(int, r.tokens))
+                for r in loop.stats.finished}
+    assert pod_toks == {k: outs["dense"][k] for k in pod_toks}, \
+        "pod-mesh dense fallback token mismatch"
+    print(f"[pod-fallback] {rep['prefill_batches']} prefill batches "
+          f"served dense on a 2x2x2 pod mesh")
+    # opt-out: strict mode keeps the hard error
+    try:
+        ServingLoop(model, params, pod_mesh, pcfg,
+                    scfg.replace(prefill_impl="fcp",
+                                 strict_prefill=True))
+        raise AssertionError("strict_prefill did not raise on pod mesh")
+    except ValueError as e:
+        assert "strict_prefill" in str(e)
+
     print("ALL MULTIDEVICE SERVING CASES PASSED")
 
 

@@ -1,0 +1,90 @@
+"""Checkpoint integrity: per-leaf CRC32 validation on restore, the
+manager's newest-first fallback past corrupted checkpoints, and
+back-compat with pre-CRC manifests."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": rng.standard_normal(3).astype(np.float32),
+            "step": np.array(seed, np.int64)}
+
+
+def _like(tree):
+    return {k: np.zeros_like(v) for k, v in tree.items()}
+
+
+def _flip_bit(path):
+    """Corrupt one payload byte of the first leaf without touching the
+    manifest — exactly what silent disk/DCN corruption looks like."""
+    arrs = sorted(path.glob("arr_*.npy"))
+    raw = bytearray(arrs[0].read_bytes())
+    raw[-1] ^= 0x40                 # payload tail, past the .npy header
+    arrs[0].write_bytes(bytes(raw))
+
+
+def test_crc_roundtrip_restores_bit_identical(tmp_path):
+    t = _tree(1)
+    checkpointer.save(tmp_path / "ck", t, extra={"step": 1})
+    man = json.loads((tmp_path / "ck" / "manifest.json").read_text())
+    assert all("crc32" in rec for rec in man["leaves"])
+    got = checkpointer.restore(tmp_path / "ck", _like(t))
+    for k in t:
+        np.testing.assert_array_equal(got[k], t[k])
+
+
+def test_bit_flip_raises_checkpoint_corruption(tmp_path):
+    t = _tree(2)
+    checkpointer.save(tmp_path / "ck", t)
+    _flip_bit(tmp_path / "ck")
+    with pytest.raises(checkpointer.CheckpointCorruption,
+                       match="CRC32"):
+        checkpointer.restore(tmp_path / "ck", _like(t))
+
+
+def test_manifest_without_crc_still_restores(tmp_path):
+    # pre-ISSUE-10 checkpoints carry no crc32 field: restore must not
+    # reject them (validation is skipped, not failed)
+    t = _tree(3)
+    checkpointer.save(tmp_path / "ck", t)
+    mpath = tmp_path / "ck" / "manifest.json"
+    man = json.loads(mpath.read_text())
+    for rec in man["leaves"]:
+        del rec["crc32"]
+    mpath.write_text(json.dumps(man))
+    _flip_bit(tmp_path / "ck")      # undetectable without the CRC
+    got = checkpointer.restore(tmp_path / "ck", _like(t))
+    assert got["w"].shape == t["w"].shape
+
+
+def test_manager_falls_back_past_corrupted_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=3)
+    t4, t6 = _tree(4), _tree(6)
+    mgr.save(4, t4, blocking=True)
+    mgr.save(6, t6, blocking=True)
+    _flip_bit(mgr.path(6))
+    tree, extra = mgr.restore(_like(t4))
+    assert extra["step"] == 4       # newest intact, not newest
+    np.testing.assert_array_equal(tree["w"], t4["w"])
+    # explicit-step restore is literal: corruption raises through
+    with pytest.raises(checkpointer.CheckpointCorruption):
+        mgr.restore(_like(t6), step=6)
+
+
+def test_manager_raises_when_no_intact_checkpoint(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_n=3)
+    mgr.save(2, _tree(2), blocking=True)
+    mgr.save(4, _tree(4), blocking=True)
+    _flip_bit(mgr.path(2))
+    _flip_bit(mgr.path(4))
+    with pytest.raises(checkpointer.CheckpointCorruption,
+                       match="no intact checkpoint"):
+        mgr.restore(_like(_tree(2)))

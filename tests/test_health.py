@@ -233,6 +233,157 @@ def test_reshape_frames_rejects_lossy_truncation():
 
 
 # --------------------------------------------------------------------------
+# pod failure domains: reshape_pod_frames, correlated-silence escalation,
+# and post-resize recalibration burn-in
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42, 999])
+def test_reshape_pod_frames_shrink_preserves_substreams(seed):
+    rng = np.random.default_rng(seed)
+    old_pods, w0, t = 4, 2, 24
+    arr = rng.integers(0, 1000, size=(old_pods * w0, t)).astype(np.int32)
+    n_valid = int(rng.integers(1, w0 * t + 1))
+    sub = arr.reshape(old_pods, w0 * t)
+    for new_pods in (4, 2, 1):
+        per = old_pods // new_pods
+        nw = 3
+        out = elastic.reshape_pod_frames(arr, old_pods, new_pods, nw,
+                                         n_valid=n_valid, fill=-1)
+        assert out.shape[0] % new_pods == 0 and out.shape[0] == nw * new_pods
+        got = out.reshape(new_pods, -1)
+        for p in range(new_pods):
+            # survivor pod p carries pinned pods [p*per, (p+1)*per) whole
+            # and back-to-back: documents stay intact, in global order
+            want = np.concatenate(
+                [sub[p * per + k, :n_valid] for k in range(per)])
+            np.testing.assert_array_equal(got[p, :per * n_valid], want)
+            assert (got[p, per * n_valid:] == -1).all()
+
+
+def test_reshape_pod_frames_grow_shrink_grow_is_bit_identical():
+    rng = np.random.default_rng(7)
+    old_pods, w0, t = 2, 2, 16
+    arr = rng.integers(0, 1000, size=(old_pods * w0, t)).astype(np.int32)
+    n_valid = 20
+    shrunk = elastic.reshape_pod_frames(arr, old_pods, 1, 2,
+                                        n_valid=n_valid, fill=-1)
+    # regrow: the survivor view splits back into the pinned view
+    # (each pinned pod's n_valid tokens land back on its own frames)
+    back = elastic.reshape_pod_frames(shrunk, 1, 1, old_pods * w0, t,
+                                      n_valid=old_pods * n_valid, fill=-1)
+    flat0 = arr.reshape(old_pods, -1)[:, :n_valid].reshape(-1)
+    np.testing.assert_array_equal(
+        back.reshape(-1)[:old_pods * n_valid], flat0)
+    # identity at full strength
+    same = elastic.reshape_pod_frames(arr, old_pods, old_pods, w0, t,
+                                      n_valid=w0 * t)
+    np.testing.assert_array_equal(same, arr)
+    # reduces to reshape_frames when both pod counts are 1
+    a = elastic.reshape_pod_frames(arr, 1, 1, 3, n_valid=40, fill=-1)
+    b = elastic.reshape_frames(arr, 3, a.shape[1], n_valid=40, fill=-1)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_reshape_pod_frames_rejects_non_divisor_fleet():
+    arr = np.zeros((6, 8), np.int32)
+    with pytest.raises(ValueError, match="must divide"):
+        elastic.reshape_pod_frames(arr, 3, 2, 2)
+    with pytest.raises(ValueError, match="do not split"):
+        elastic.reshape_pod_frames(arr, 4, 2, 2)
+
+
+def test_pod_survivor_seqlens_expands_and_validates():
+    assert elastic.pod_survivor_seqlens([3, 5], 4, 2) == [3, 5, 3, 5]
+    assert elastic.pod_survivor_seqlens([3, 5], 4, 4) == [3, 5]
+    with pytest.raises(ValueError, match="must divide"):
+        elastic.pod_survivor_seqlens([3, 5], 4, 3)
+    with pytest.raises(ValueError, match="degenerate"):
+        elastic.pod_survivor_seqlens([3, 5], 4, 0)
+
+
+def test_replan_key_pod_expansion_matches_full_strength_key():
+    pcfg = ParallelConfig(block_size=64)
+    # shrunken view == plain key over the doubled composition
+    k_pod = elastic.replan_key([128, 64], 2, 64, pcfg=pcfg,
+                               pods=1, base_pods=2)
+    k_flat = elastic.replan_key([128, 64, 128, 64], 2, 64, pcfg=pcfg)
+    assert k_pod == k_flat
+    # full strength == byte-identical to the pre-shrink key (regrow
+    # re-hits the plan cache)
+    k_full = elastic.replan_key([128, 64], 2, 64, pcfg=pcfg,
+                                pods=2, base_pods=2)
+    k_plain = elastic.replan_key([128, 64], 2, 64, pcfg=pcfg)
+    assert k_full == k_plain
+
+
+def test_monitor_escalates_correlated_pod_silence_to_pod_loss():
+    clock = FakeClock()
+    topo = H.FleetTopology(2, 2)
+    m = H.HealthMonitor(4, step_timeout=10.0, clock=clock, topology=topo)
+    m.observe(0, np.ones(4))
+    clock.t = 5.0
+    m.heartbeat(0), m.heartbeat(1)          # pod 0 stays chatty
+    clock.t = 14.0                          # pod 1 (flat 2,3) fully silent
+    with pytest.raises(H.PodLoss) as ei:
+        m.check(7)
+    assert ei.value.pod == 1 and ei.value.step == 7
+    ev = m.events[-1]
+    assert ev.kind == "fail" and ev.pod == 1 and ev.workers == (2, 3)
+    # partial silence inside a pod stays worker-scoped
+    m2 = H.HealthMonitor(4, step_timeout=10.0, clock=FakeClock(),
+                         topology=topo)
+    m2.observe(0, np.ones(4))
+    m2._clock.t = 14.0
+    m2.heartbeat(3, now=14.0)               # pod 1 half-alive
+    m2.heartbeat(0, now=14.0), m2.heartbeat(1, now=14.0)
+    with pytest.raises(H.WorkerLoss) as ei2:
+        m2.check(9)
+    assert ei2.value.worker == 2
+
+
+def test_tracker_resize_burnin_discards_stale_ewma():
+    tr = elastic.StragglerTracker(n_workers=4)
+    for _ in range(10):
+        tr.observe(np.array([1.0, 2.0, 1.0, 4.0]))
+    # same ids, but burn-in requested: history measured on the old
+    # topology is discarded instead of remapped
+    tr.resize([0, 1, 2], burnin=True)
+    assert tr.n_workers == 3
+    assert (tr.speeds() == 1.0).all()
+    assert not tr.has_straggler()
+
+
+def test_monitor_resize_burnin_suppresses_replan_for_window():
+    m = _monitor()                          # window=3, cooldown=4
+    slow = H.per_worker_times(1.0, 4, [1.0, 1.0, 1.0, 2.0])
+    m.resize(topology=H.FleetTopology(2, 2))
+    assert m.in_burnin and m.n_workers == 4
+    events = []
+    for step in range(10):
+        m.observe(step, slow)
+        events.append(m.maybe_replan(step))
+    # burn-in holds replanning off until `window` observations have
+    # been taken on the NEW topology; the eventual demotion is built
+    # entirely from fresh post-resize EWMAs
+    assert events[0] is None and events[1] is None
+    assert not m.in_burnin
+    demote = next(e for e in events if e is not None)
+    assert demote.kind == "demote"
+    assert demote.step >= m.window - 1
+    # multi-pod latch collapses onto per-pod slots gated by the slowest
+    # instance across pods: flat 3 is slot 1 of pod 1
+    assert m.planning_speeds() == (1.0, 0.5)
+
+
+def test_monitor_resize_requires_exactly_one_spec():
+    m = _monitor()
+    with pytest.raises(ValueError):
+        m.resize()
+    with pytest.raises(ValueError):
+        m.resize([0, 1], topology=H.FleetTopology(1, 2))
+
+
+# --------------------------------------------------------------------------
 # deterministic replay: restore-and-replay == uninterrupted stream
 # --------------------------------------------------------------------------
 
